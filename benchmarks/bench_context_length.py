@@ -1,0 +1,81 @@
+"""Paper Fig. 9: max supported context + throughput per policy.
+
+For each model (7B/13B/70B-class: qwen3-0.6b stands in only for smoke;
+here we use nemo-12B, starcoder2-15B, chameleon-34B) and each policy
+(Infinite-LLM, vLLM-multi, vLLM-single), report (a) the longest context
+servable with 32 chips and (b) decode throughput at a short (1k) and at
+the max context — all from the calibrated perf/memory model.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.serving.perfmodel import InstancePerfModel
+
+TOTAL_CHIPS = 32
+INST_CHIPS = 8
+
+
+def _max_ctx_tokens(perf: InstancePerfModel) -> int:
+    return perf.kv_tokens_capacity()
+
+
+def run(csv=True):
+    rows = []
+    for arch in ("mistral-nemo-12b", "starcoder2-15b", "chameleon-34b"):
+        cfg = get_config(arch)
+        inst = InstancePerfModel(cfg, chips=INST_CHIPS)
+        single = InstancePerfModel(cfg, chips=TOTAL_CHIPS)
+        n_inst = TOTAL_CHIPS // INST_CHIPS
+
+        # Max context: vllm-multi is capped by ONE instance's memory;
+        # vllm-single by the whole cluster in one instance; infinite by
+        # the cluster POOL (minus one instance's working set).
+        cap_multi = _max_ctx_tokens(inst)
+        cap_single = _max_ctx_tokens(single)
+        cap_inf = _max_ctx_tokens(inst) * n_inst
+
+        # Short-context throughput (1k ctx, saturating batch):
+        def short_tps(perf, n_copies):
+            beta = 256
+            return n_copies * perf.tps(beta, [1024] * beta)
+
+        tp_multi = short_tps(inst, n_inst)
+        tp_single = short_tps(single, 1)
+        tp_inf = short_tps(inst, n_inst)          # same parallelism!
+
+        # Long-context throughput at each policy's own max length:
+        def long_tps(perf, ctx, n_copies=1, offload=0):
+            return n_copies * perf.tps(1, [ctx], offloaded_tokens=offload)
+
+        tl_multi = long_tps(inst, cap_multi)
+        tl_single = long_tps(single, cap_single)
+        tl_inf = long_tps(inst, cap_inf, offload=cap_inf - cap_multi)
+
+        rows.append((arch, cap_multi, cap_single, cap_inf,
+                     tp_multi, tp_single, tp_inf,
+                     tl_multi, tl_single, tl_inf))
+    if csv:
+        print("fig9_arch,maxctx_vllm_multi,maxctx_vllm_single,"
+              "maxctx_infinite,short_tps_multi,short_tps_single,"
+              "short_tps_infinite,long_tps_multi,long_tps_single,"
+              "long_tps_infinite")
+        for r in rows:
+            print(",".join(str(x) if isinstance(x, (int, str))
+                           else f"{x:.1f}" for x in r))
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    r = rows[0]
+    print(f"bench_context_length,{us:.1f},"
+          f"ctx_gain_vs_multi={r[3] / r[1]:.1f}x,"
+          f"short_tps_gain_vs_single={r[6] / r[5]:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Paper Fig. 7(a-c): debtor / creditor / aggregate TPS vs blocks moved.
+
+Reproduces the shape of the paper's micro-benchmark with the calibrated
+Eq. 5-7 model: debtor runs a 1000K-token context, creditor runs
+~500-token traffic; KV blocks migrate debtor -> creditor.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.serving.perfmodel import InstancePerfModel
+
+BLOCK_TOKENS = 512
+
+
+def run(csv=True):
+    cfg = get_config("mistral-nemo-12b")
+    m = InstancePerfModel(cfg, chips=8)      # one "instance" = 8 chips
+    long_len = 1_000_000
+    spare = 400_000
+    rows = []
+    for blocks in range(0, 1_000_000 // BLOCK_TOKENS + 1,
+                        50_000 // BLOCK_TOKENS):
+        off = blocks * BLOCK_TOKENS
+        extra = min(off // 2_000, 240)
+        debtor = m.tps(1 + extra, [long_len] + [500] * extra,
+                       offloaded_tokens=off)
+        c_beta = max(8, 128 - max(0, off - spare) // 5_000)
+        creditor = m.tps(c_beta, [5_000] * c_beta, hosted_tokens=off)
+        rows.append((blocks, debtor, creditor, debtor + creditor))
+    if csv:
+        print("fig7_blocks_moved,debtor_tps,creditor_tps,aggregate_tps")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.1f},{r[2]:.1f},{r[3]:.1f}")
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    base = rows[0][3]
+    peak = max(r[3] for r in rows)
+    peak_blocks = max(rows, key=lambda r: r[3])[0]
+    print(f"bench_debtor_creditor,{us:.1f},peak_gain={peak / base:.2f}x"
+          f"@blocks={peak_blocks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Paper Fig. 10 + Table 1: end-to-end serving on the 9 generated traces.
+
+Event-driven simulation (perf-model-timed, v5e constants): Infinite-LLM
+vs vLLM-multi on short traces 0-2 (Fig. 10a) and vs vLLM-single on long
+traces 3-8 (Fig. 10b). Also prints the Table-1 stats of the generated
+traces for verification.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.traces import TRACE_SPECS, gen_trace, trace_stats
+from repro.configs import get_config
+from repro.serving.simulator import ClusterSimulator, SimRequest, \
+    make_policy_cluster
+
+TOTAL_CHIPS = 32
+# Instance sizes chosen to match the paper's memory-pressure regime
+# (per-instance KV capacity ~50-100x the trace's average length): small
+# TP for short traces (the paper's DP8xTP1-like rows), one-node TP for
+# long traces.
+INST_CHIPS_SHORT = 4
+INST_CHIPS_LONG = 8
+N_REQ = {0: 300, 1: 300, 2: 300, 3: 32, 4: 32, 5: 20, 6: 20, 7: 10, 8: 8}
+RATE = {0: 24.0, 1: 24.0, 2: 24.0, 3: 0.8, 4: 0.5, 5: 0.3, 6: 0.4,
+        7: 0.15, 8: 0.1}
+
+
+def _to_sim(reqs):
+    return [SimRequest(req_id=i, arrival=r.arrival,
+                       prompt_len=r.prompt_len, output_len=r.output_len)
+            for i, r in enumerate(reqs)]
+
+
+def run(csv=True, horizon=2000.0):
+    """Paper protocol: sweep request rates per policy, report the MAX
+    achieved throughput (Fig. 10 compares maximum achieved tput)."""
+    cfg = get_config("mistral-nemo-12b")
+    rows = []
+    for tid in sorted(TRACE_SPECS):
+        base_policy = "vllm-multi" if tid <= 2 else "vllm-single"
+        inst_chips = INST_CHIPS_SHORT if tid <= 2 else INST_CHIPS_LONG
+        res = {}
+        for policy in ("infinite", base_policy):
+            best = None
+            for mult in (0.5, 1.0, 2.0):
+                reqs = gen_trace(tid, N_REQ[tid], RATE[tid] * mult)
+                sim = make_policy_cluster(cfg, policy, TOTAL_CHIPS,
+                                          inst_chips)
+                r = sim.run(_to_sim(reqs), horizon=horizon)
+                if best is None or r["throughput_tok_s"] > \
+                        best["throughput_tok_s"]:
+                    best = r
+            res[policy] = best
+        inf, base = res["infinite"], res[base_policy]
+        gain = inf["throughput_tok_s"] / max(base["throughput_tok_s"],
+                                             1e-9)
+        rows.append((tid, base_policy, inf["throughput_tok_s"],
+                     base["throughput_tok_s"], gain, inf["finished"],
+                     base["finished"], inf["failed"], base["failed"]))
+    if csv:
+        print("fig10_trace,baseline,inf_tps,base_tps,gain,"
+              "inf_done,base_done,inf_fail,base_fail")
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]:.0f},{r[3]:.0f},{r[4]:.2f},"
+                  f"{r[5]},{r[6]},{r[7]},{r[8]}")
+    return rows
+
+
+def print_table1(csv=True):
+    if csv:
+        print("table1_trace,target_range,target_avg,target_sd,"
+              "gen_avg,gen_sd,gen_min,gen_max")
+        for tid, (rmax, avg, sd) in sorted(TRACE_SPECS.items()):
+            ga, gs, gmin, gmax = trace_stats(tid)
+            print(f"{tid},1-{rmax},{avg},{sd:.0f},{ga:.0f},{gs:.0f},"
+                  f"{gmin},{gmax}")
+
+
+def main():
+    t0 = time.perf_counter()
+    print_table1()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    short_g = [r[4] for r in rows if r[0] <= 2]
+    long_g = [r[4] for r in rows if r[0] >= 3]
+    print(f"bench_e2e_traces,{us:.1f},"
+          f"gain_short={min(short_g):.2f}-{max(short_g):.2f}x,"
+          f"gain_long={min(long_g):.2f}-{max(long_g):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

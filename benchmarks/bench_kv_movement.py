@@ -1,0 +1,81 @@
+"""Paper Fig. 12: decode-throughput overhead of KV movement.
+
+(a) REAL in-process cluster: a spanning request keeps moving KV chunks
+    of m tokens/step (m in {0, 8, 16, 32}); wall-clock tokens/s measured
+    on CPU at smoke scale — shows relative overhead of movement.
+(b) Modeled on v5e: movement bytes/step vs decode-step time; overlap
+    hides movement while move_bytes/ici_bw < step_time (the paper's
+    16-tokens/step break-even).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.hardware import V5E
+from repro.models.model import init_params
+from repro.serving import Cluster, Request, SamplingParams
+from repro.serving.perfmodel import InstancePerfModel
+
+
+def modeled(csv=True):
+    cfg = get_config("mistral-nemo-12b")
+    perf = InstancePerfModel(cfg, chips=8)
+    beta = 64
+    step_t = cfg.num_layers * perf.t_layer(beta, [4096] * beta)
+    rows = []
+    for m_tokens in (0, 8, 16, 32, 64, 128):
+        move_bytes = m_tokens * cfg.kv_bytes_per_token()
+        t_move = move_bytes / V5E.ici_link_bw
+        overlapped = max(step_t, t_move)          # overlap w/ compute
+        serial = step_t + t_move                  # no overlap
+        rows.append((m_tokens, step_t * 1e3, t_move * 1e3,
+                     beta / overlapped, beta / serial))
+    if csv:
+        print("fig12_tokens_per_step,step_ms,move_ms,tps_overlap,"
+              "tps_serial")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.3f},{r[2]:.3f},{r[3]:.0f},{r[4]:.0f}")
+    return rows
+
+
+def measured(csv=True):
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    rows = []
+    for chunk in (8, 16, 32):
+        cl = Cluster(params, cfg, n_instances=2, max_batch=2,
+                     max_local_len=48, pool_blocks=64, block_size=8,
+                     move_chunk_tokens=chunk, schedule_every=1000)
+        req = Request(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                      sampling=SamplingParams(max_new_tokens=24))
+        cl.submit(req)
+        t0 = time.perf_counter()
+        cl.run_until_done(max_steps=300)
+        dt = time.perf_counter() - t0
+        moved = cl.throughput_stats["kv_moved_bytes"]
+        rows.append((chunk, len(req.output) / dt, moved))
+    if csv:
+        print("fig12_measured_chunk,tok_per_s_cpu,kv_moved_bytes")
+        for r in rows:
+            print(f"{r[0]},{r[1]:.2f},{r[2]}")
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = modeled()
+    measured()
+    us = (time.perf_counter() - t0) * 1e6
+    # break-even: largest m with overlapped == no-move throughput
+    base = rows[0][3]
+    be = max((r[0] for r in rows if r[3] >= base * 0.995), default=0)
+    print(f"bench_kv_movement,{us:.1f},overlap_breakeven_tokens={be}")
+
+
+if __name__ == "__main__":
+    main()

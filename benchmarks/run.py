@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Each prints CSV rows followed by a ``name,us_per_call,derived`` summary.
+Run: PYTHONPATH=src python -m benchmarks.run [filter]
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_context_length, bench_debtor_creditor,
+                        bench_distattn_methods, bench_e2e_traces,
+                        bench_kv_movement, bench_ship_query_vs_kv)
+
+BENCHES = [
+    ("fig4c_ship_query_vs_kv", bench_ship_query_vs_kv.main),
+    ("fig7_debtor_creditor", bench_debtor_creditor.main),
+    ("fig9_context_length", bench_context_length.main),
+    ("fig10_table1_e2e_traces", bench_e2e_traces.main),
+    ("fig11_distattn_methods", bench_distattn_methods.main),
+    ("fig12_kv_movement", bench_kv_movement.main),
+]
+
+
+def main() -> None:
+    pat = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = 0
+    for name, fn in BENCHES:
+        if pat and pat not in name:
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},FAILED,")
+        print(f"# {name} total {(time.perf_counter() - t0):.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Table 1 trace generator: 9 traces matching the paper's ranges/avg/SD.
+
+Traces 0-2 ("S"): ShareGPT4-like short conversations (log-normal body,
+range 1-60k, decreasing SD). Traces 3-8 ("L"): long-context mixes with
+the paper's ranges and means. Lengths are drawn from a two-component
+mix (bulk log-normal + long tail) and clipped to the range; output
+lengths are a fraction of the context.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+# (range_max, target_avg, target_sd)  — paper Table 1
+TRACE_SPECS = {
+    0: (60_000, 1_233, 7_785.68),
+    1: (60_000, 712, 5_531.40),
+    2: (60_000, 469, 3_506.36),
+    3: (200_000, 56_362, 28_787.78),
+    4: (280_000, 75_650, 39_479.42),
+    5: (600_000, 160_239, 87_906.67),
+    6: (480_000, 128_804, 70_647.93),
+    7: (1_200_000, 293_945, 172_169.14),
+    8: (2_000_000, 498_609, 261_817.24),
+}
+
+
+@dataclass
+class TraceRequest:
+    arrival: float
+    prompt_len: int
+    output_len: int
+
+
+def gen_lengths(trace_id: int, n: int, seed: int = 0) -> np.ndarray:
+    rmax, avg, sd = TRACE_SPECS[trace_id]
+    rng = np.random.default_rng(seed * 100 + trace_id)
+    if trace_id <= 2:
+        # Table 1's short traces have sd >> avg with a hard range cap —
+        # i.e. a near-two-point law: a low lognormal bulk (typical chats)
+        # plus a rare near-rmax tail. Solve the tail fraction f and bulk
+        # mean b analytically from the first two target moments (tail ~
+        # U[0.8 rmax, rmax]: mean 0.9 rmax, E[t^2] ~ 0.8133 rmax^2).
+        f = (sd ** 2 + avg ** 2) / (0.8133 * rmax ** 2)
+        b = max((avg - f * 0.9 * rmax) / (1.0 - f), 16.0)
+        sigma = 1.0
+        mu = np.log(b) - sigma ** 2 / 2.0
+        bulk = rng.lognormal(mu, sigma, size=n)
+        tail_mask = rng.random(n) < f
+        tail = rng.uniform(0.8 * rmax, rmax, size=n)
+        lens = np.where(tail_mask, tail, bulk)
+    else:
+        # Long traces: normal around avg with the table SD.
+        lens = rng.normal(avg, sd, size=n)
+    return np.clip(lens, 1, rmax).astype(np.int64)
+
+
+def gen_trace(trace_id: int, n: int, rate: float, seed: int = 0,
+              output_frac: float = 0.1, max_output: int = 2048
+              ) -> List[TraceRequest]:
+    """Poisson arrivals at ``rate`` req/s with Table-1 length marginals."""
+    rng = np.random.default_rng(seed * 7919 + trace_id)
+    lens = gen_lengths(trace_id, n, seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    t = np.cumsum(gaps)
+    out = np.minimum(np.maximum((lens * output_frac).astype(np.int64), 8),
+                     max_output)
+    return [TraceRequest(float(t[i]), int(lens[i] - out[i]) or 1,
+                         int(out[i])) for i in range(n)]
+
+
+def trace_stats(trace_id: int, n: int = 5000, seed: int = 0
+                ) -> Tuple[float, float, int, int]:
+    lens = gen_lengths(trace_id, n, seed)
+    return float(lens.mean()), float(lens.std()), int(lens.min()), \
+        int(lens.max())

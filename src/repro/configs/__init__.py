@@ -1,0 +1,38 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke_config(arch_id)``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, reduce_config
+
+_ARCH_MODULES: Dict[str, str] = {
+    "kimi-k2-1t-a32b":   "repro.configs.kimi_k2_1t_a32b",
+    "qwen2-moe-a2.7b":   "repro.configs.qwen2_moe_a2_7b",
+    "starcoder2-15b":    "repro.configs.starcoder2_15b",
+    "mistral-nemo-12b":  "repro.configs.mistral_nemo_12b",
+    "olmo-1b":           "repro.configs.olmo_1b",
+    "qwen3-0.6b":        "repro.configs.qwen3_0_6b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "chameleon-34b":     "repro.configs.chameleon_34b",
+    "musicgen-medium":   "repro.configs.musicgen_medium",
+    "xlstm-350m":        "repro.configs.xlstm_350m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str, **kw) -> ModelConfig:
+    return reduce_config(get_config(arch_id), **kw)
+
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "ARCH_IDS",
+    "get_config", "get_smoke_config", "reduce_config",
+]

@@ -1,0 +1,21 @@
+from repro.core.online_softmax import (
+    combine, empty_partial, finalize, merge_partials,
+    micro_attention_decode, micro_attention_prefill,
+)
+from repro.core.attention import (
+    dist_attention_decode, dist_attention_prefill,
+    full_attention_decode, full_attention_prefill,
+)
+from repro.core.distattn import (
+    distattn_decode_paged, gather_local_kv, local_mask_from_table,
+    merge_over_axes,
+)
+
+__all__ = [
+    "combine", "empty_partial", "finalize", "merge_partials",
+    "micro_attention_decode", "micro_attention_prefill",
+    "dist_attention_decode", "dist_attention_prefill",
+    "full_attention_decode", "full_attention_prefill",
+    "distattn_decode_paged", "gather_local_kv", "local_mask_from_table",
+    "merge_over_axes",
+]

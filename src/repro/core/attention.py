@@ -1,0 +1,92 @@
+"""DistAttention as a composable module (single-device semantics).
+
+``dist_attention_decode`` / ``dist_attention_prefill`` evaluate attention
+over an arbitrary partition of the KV sequence dimension and merge the
+MicroAttention partials — mathematically equivalent to full attention
+(paper §4).  The mesh-parallel version (partials merged with collectives)
+lives in ``repro.core.distattn``; the Pallas kernel in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_softmax import (
+    combine,
+    empty_partial,
+    finalize,
+    merge_partials,
+    micro_attention_decode,
+    micro_attention_prefill,
+)
+
+
+def full_attention_decode(q, k, v, mask, *, scale=None) -> jax.Array:
+    """Reference single-shot decode attention (paper Eq. 1). q:[B,H,D]."""
+    o, _, l = micro_attention_decode(q, k, v, mask, scale=scale)
+    return finalize(o, l).astype(q.dtype)
+
+
+def dist_attention_decode(
+    q: jax.Array,                                  # [B, H, D]
+    kv_parts: Sequence[Tuple[jax.Array, jax.Array, jax.Array]],
+    *,
+    scale=None,
+) -> jax.Array:
+    """Decode attention over an arbitrary sequence partition of the KV.
+
+    ``kv_parts`` is a list of (k, v, mask) slices — the paper's MA blocks,
+    conceptually living on different instances. Equivalent to
+    ``full_attention_decode`` on the concatenated KV.
+    """
+    B, H, D = q.shape
+    acc = empty_partial((B, H, D), (B, H))
+    for k, v, mask in kv_parts:
+        acc = combine(acc, micro_attention_decode(q, k, v, mask, scale=scale))
+    return finalize(acc[0], acc[2]).astype(q.dtype)
+
+
+def full_attention_prefill(q, k, v, *, q_offset=0, kv_valid=None, scale=None,
+                           window=0):
+    """Reference causal prefill attention. q:[B,T,H,D], k/v:[B,S,K,D].
+
+    ``q_offset`` positions queries at [offset, offset+T) against KV at
+    [0, S) — used for chunked prefill where KV includes the past.
+    """
+    B, T = q.shape[:2]
+    S = k.shape[1]
+    q_pos = q_offset + jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+    kv_pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, S), dtype=bool)
+    o, _, l = micro_attention_prefill(q, k, v, q_pos, kv_pos, kv_valid,
+                                      scale=scale, window=window)
+    return finalize(o, l).astype(q.dtype)
+
+
+def dist_attention_prefill(
+    q: jax.Array,                                  # [B, T, H, D]
+    kv_parts: Sequence[Tuple[jax.Array, jax.Array, jax.Array, jax.Array]],
+    q_pos: jax.Array,                              # [B, T]
+    *,
+    scale=None,
+) -> jax.Array:
+    """Causal prefill over a partition of KV slices.
+
+    ``kv_parts``: list of (k, v, kv_pos, kv_valid) — positions are absolute
+    so slices may live anywhere in the sequence and in any order.
+    """
+    B, T, H, D = q.shape
+    acc = empty_partial((B, T, H, D), (B, T, H))
+    for k, v, kv_pos, kv_valid in kv_parts:
+        part = micro_attention_prefill(q, k, v, q_pos, kv_pos, kv_valid,
+                                       scale=scale)
+        acc = combine(acc, part)
+    return finalize(acc[0], acc[2]).astype(q.dtype)
+
+
+def sliding_window_mask_decode(kv_pos, cur_pos, window):
+    """Valid-mask for local attention at decode: last ``window`` tokens."""
+    return (kv_pos > cur_pos[:, None] - window) & (kv_pos <= cur_pos[:, None])

@@ -1,0 +1,77 @@
+"""Paper-§7.4 baselines: RingAttention, head-partition TP, and ship-KV.
+
+All are written as shard_map bodies over a named axis so they run on real
+meshes (tests use 8 fake CPU devices) and so their communication volume is
+visible in lowered HLO for the Fig. 11 benchmark.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.online_softmax import (
+    combine, empty_partial, finalize,
+    micro_attention_decode, micro_attention_prefill,
+)
+
+
+def ring_attention_prefill(q, k, v, q_pos, kv_pos, kv_valid, axis_name,
+                           *, scale=None):
+    """RingAttention (Liu et al.): KV blocks rotate, queries stay.
+
+    Inside shard_map: q [B,T,H,D] local query block; k/v [B,S,K,D] local KV
+    block; positions absolute. Per step, each rank ships its whole KV block
+    to the next rank (the communication the paper's Fig. 11 charges Ring
+    with), accumulating online-softmax partials locally.
+    """
+    P = jax.lax.psum(1, axis_name)
+    B, T, H, D = q.shape
+    acc = empty_partial((B, T, H, D), (B, T, H))
+    perm = [(i, (i + 1) % P) for i in range(P)]
+
+    def body(i, carry):
+        acc, k, v, kv_pos, kv_valid = carry
+        part = micro_attention_prefill(q, k, v, q_pos, kv_pos, kv_valid,
+                                       scale=scale)
+        acc = combine(acc, part)
+        # Rotate the KV block (+ its metadata) around the ring.
+        k = jax.lax.ppermute(k, axis_name, perm)
+        v = jax.lax.ppermute(v, axis_name, perm)
+        kv_pos = jax.lax.ppermute(kv_pos, axis_name, perm)
+        kv_valid = jax.lax.ppermute(kv_valid, axis_name, perm)
+        return acc, k, v, kv_pos, kv_valid
+
+    acc, *_ = jax.lax.fori_loop(0, P, body, (acc, k, v, kv_pos, kv_valid))
+    return finalize(acc[0], acc[2]).astype(q.dtype)
+
+
+def tp_head_attention_decode(q_local, k_local, v_local, mask, *, scale=None):
+    """Megatron-style TP attention: KV sharded by heads, sequence whole.
+
+    Inside shard_map: q_local [B,H/P,D], k/v_local [B,S,K/P,D] — every rank
+    holds the FULL sequence for its head group (this is what forces KV-head
+    replication when kv_heads < P, the memory cost DistAttention removes).
+    No collective here; the o-proj outside is row-parallel (one psum).
+    """
+    o, _, l = micro_attention_decode(q_local, k_local, v_local, mask,
+                                     scale=scale)
+    return finalize(o, l).astype(q_local.dtype)
+
+
+def ship_kv_decode(q, k_local, v_local, mask_local, axis_name, *, scale=None):
+    """Strawman of paper Fig. 4(a): gather the distributed KV to every rank
+    and run full attention locally. Communication = the whole KVCache."""
+    k = jax.lax.all_gather(k_local, axis_name, axis=1, tiled=True)
+    v = jax.lax.all_gather(v_local, axis_name, axis=1, tiled=True)
+    mask = jax.lax.all_gather(mask_local, axis_name, axis=1, tiled=True)
+    o, _, l = micro_attention_decode(q, k, v, mask, scale=scale)
+    return finalize(o, l).astype(q.dtype)
+
+
+def distattn_decode(q, k_local, v_local, mask_local, axis_name, *, scale=None):
+    """DistAttention over the same layout as ``ship_kv_decode`` for an
+    apples-to-apples Fig. 11 comparison: communication = q-scalars + merge."""
+    from repro.core.distattn import merge_over_axes
+    o, m, l = micro_attention_decode(q, k_local, v_local, mask_local,
+                                     scale=scale)
+    return merge_over_axes(o, m, l, axis_name).astype(q.dtype)

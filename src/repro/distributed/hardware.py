@@ -1,0 +1,23 @@
+"""Target hardware constants (TPU v5e) for perf modeling and roofline."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12       # FLOP/s per chip
+    hbm_bytes: float = 16e9               # per chip
+    hbm_bw: float = 819e9                 # bytes/s per chip
+    ici_link_bw: float = 50e9             # bytes/s per link
+    dcn_bw: float = 25e9                  # bytes/s per host, pod-to-pod
+    vmem_bytes: float = 128e6             # ~128 MB VMEM per chip
+
+    @property
+    def critical_intensity(self) -> float:
+        """FLOP/byte where compute and HBM time are equal (~240 on v5e)."""
+        return self.peak_flops_bf16 / self.hbm_bw
+
+
+V5E = HardwareSpec()

@@ -1,0 +1,158 @@
+"""PartitionSpec rules for every parameter/activation, per arch x mode.
+
+Conventions (single pod mesh: ("data", "model"); multi-pod adds "pod"):
+  * TP over "model": column-parallel in-projections, row-parallel
+    out-projections, vocab-parallel embeddings, expert-parallel MoE.
+  * FSDP ("zero") over "data" (+"pod" in train): weights additionally
+    sharded on their non-TP dim; always on for training (optimizer state
+    dominates), serve-time only for archs whose weights exceed the HBM
+    replication budget (kimi-k2).
+  * Serving pool: KV blocks sharded over pool_axes — ("data","model")
+    when kv_heads < TP degree (DistAttention-over-model replaces
+    head-TP), else ("data",) with kv heads over "model".
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# (regex on param path, spec builder) — first match wins.
+# ``f`` is the fsdp axis (or None), "model" is the TP axis.
+
+
+def _rules(cfg: ModelConfig, f):
+    m = "model"
+    # kv projections: column-parallel ONLY when whole kv heads divide the
+    # TP degree (16 on the production mesh). Otherwise the split lands
+    # INSIDE head_dim and every attention use pays a gather to reassemble
+    # heads (measured 259 GB/step/device on qwen3 prefill — §Perf-2);
+    # replicating the small wk/wv is strictly cheaper.
+    kv_tp = m if cfg.num_kv_heads % 16 == 0 else None
+    q_tp = m if cfg.num_heads % 16 == 0 else None
+    return [
+        # --- embeddings ---
+        (r"embed$",               P(m, f)),
+        (r"unembed$",             P(f, m)),
+        # --- attention ---
+        (r"attn/wq$",             P(f, q_tp)),
+        (r"attn/wk$",             P(f, kv_tp)),
+        (r"attn/wv$",             P(f, kv_tp)),
+        (r"attn/wo$",             P(q_tp, f)),
+        (r"attn/(q|k)_norm$",     P()),
+        # --- dense FFN ---
+        (r"ffn/w[ig]$",           P(f, m)),
+        (r"ffn/wo$",              P(m, f)),
+        # --- MoE: experts over model (EP), internals over fsdp ---
+        (r"moe/router$",          P(f, None)),
+        (r"moe/experts/w[ig]$",   P(m, f, None)),
+        (r"moe/experts/wo$",      P(m, None, f)),
+        (r"moe/shared/w[ig]$",    P(None, f, m)),
+        (r"moe/shared/wo$",       P(None, m, f)),
+        # --- RG-LRU (recurrent width over model) ---
+        (r"rglru/w_gate$",        P(f, m)),
+        (r"rglru/w_rec_in$",      P(f, m)),
+        (r"rglru/conv_w$",        P(None, m)),
+        (r"rglru/w_[ri]$",        P(m, None)),
+        (r"rglru/b_[ri]$",        P()),
+        (r"rglru/log_sig_lambda$", P()),
+        (r"rglru/w_out$",         P(m, f)),
+        # --- xLSTM ---
+        (r"blk/w_up$",            P(f, m)),
+        (r"blk/w_gate$",          P(f, m)),
+        (r"blk/w[qkv]$",          P(m, None)),
+        (r"blk/w_if$",            P(m, None)),
+        (r"blk/b_if$",            P()),
+        (r"blk/gn_scale$",        P()),
+        (r"blk/w_down$",          P(m, f)),
+        (r"blk/w_x$",             P(f, m)),
+        (r"blk/w_h$",             P(f, m)),
+        (r"blk/b$",               P()),
+        (r"blk/w_ff_i$",          P(f, m)),
+        (r"blk/w_ff_o$",          P(m, f)),
+        # --- norms / everything 1-D ---
+        (r".*",                   P()),
+    ]
+
+
+def _spec_for_path(path: str, ndim: int, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            # Stacked layer dims (scan) prepend axes: pad spec with None.
+            pad = ndim - len(spec)
+            if pad < 0:
+                # Param is lower-rank than the rule (e.g. smoke configs
+                # or tied weights): drop trailing axes.
+                return P(*tuple(spec)[:ndim])
+            return P(*(([None] * pad) + list(spec)))
+    return P()
+
+
+def param_specs(cfg: ModelConfig, params_shape, *, fsdp: bool,
+                fsdp_axis="data"):
+    """Pytree of PartitionSpec matching ``params_shape`` (eval_shape tree).
+
+    Scan-stacked leading dims are left unsharded; specs are validated for
+    divisibility (a dim that doesn't divide the mesh axis falls back to
+    replicated on that dim).
+    """
+    f = fsdp_axis if fsdp else None
+    rules = _rules(cfg, f)
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, 'key', getattr(k, 'idx', k)))
+                        for k in path)
+        return _spec_for_path(pstr, np.ndim(leaf) and leaf.ndim, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def validate_divisibility(specs, shapes, mesh) -> None:
+    """Replace any spec axis that does not divide the dim by None."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, leaf):
+        dims = leaf.shape
+        out = []
+        for i, ax in enumerate(tuple(spec) + (None,) * (len(dims)
+                                                        - len(spec))):
+            if ax is None:
+                out.append(None)
+                continue
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            total = int(np.prod([sizes[a] for a in axs]))
+            out.append(ax if dims[i] % total == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes)
+
+
+# --------------------------------------------------------------------- #
+# Serving-layout decisions
+# --------------------------------------------------------------------- #
+def serve_pool_axes(cfg: ModelConfig, mesh) -> Tuple[str, ...]:
+    """Where KV pool shards live. kv_heads % tp == 0 -> heads over model
+    and pool over data only; otherwise DistAttention over BOTH axes."""
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    axes = [a for a in mesh.axis_names if a in ("pod", "data")]
+    if cfg.num_kv_heads % tp == 0:
+        return tuple(axes)                     # tp_head mode
+    return tuple(axes) + ("model",)            # seq_model mode
+
+
+def serve_fsdp(cfg: ModelConfig, mesh) -> bool:
+    """Shard weights over data at serve time only when replication would
+    not fit: params_bytes / tp_degree > ~60% of chip HBM."""
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    per_chip = cfg.param_count() * 2 / tp
+    from repro.distributed.hardware import V5E
+    return per_chip > 0.6 * V5E.hbm_bytes
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,80 @@
+"""jit'd wrappers around the Pallas kernels: padding, dtype, auto-interpret.
+
+Head dim is padded to a 128-lane multiple (zero-padding leaves q.k and
+p.v unchanged, the softmax scale always uses the TRUE head dim), sequence
+to the tile size. ``interpret`` defaults to True off-TPU so the same code
+validates on CPU and compiles natively on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill import flash_prefill_kernel
+from repro.kernels.micro_attn_decode import paged_micro_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_last(x, mult):
+    d = x.shape[-1]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+
+
+def _pad_axis(x, axis, mult):
+    d = x.shape[axis]
+    pad = (-d) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "bq", "bk",
+                                             "interpret"))
+def flash_prefill(q, k, v, *, scale=None, window=0, bq=128, bk=128,
+                  interpret=None):
+    """Causal flash attention. q [B,S,H,D], k/v [B,S,K,D] -> [B,S,H,D]."""
+    B, S, H, D = q.shape
+    if scale is None:
+        scale = D ** -0.5
+    if interpret is None:
+        interpret = not _on_tpu()
+    qp = _pad_axis(_pad_last(q, 128), 1, bq)
+    kp = _pad_axis(_pad_last(k, 128), 1, bq)
+    vp = _pad_axis(_pad_last(v, 128), 1, bq)
+    out = flash_prefill_kernel(qp, kp, vp, seq=S, scale=scale, window=window,
+                               bq=bq, bk=bk, interpret=interpret)
+    return out[:, :S, :, :D]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_micro_attention(q, pool_k, pool_v, table, tail_len, *,
+                          scale=None, interpret=None):
+    """Paged DistAttention MicroAttention partial (decode).
+
+    q [R,H,D]; pool_k/v [NB,bs,K,D]; table [R,MB] (-1 padded, seq order);
+    tail_len [R] valid tokens in each request's LAST local slot.
+    Returns (o [R,H,D] f32 unnormalized, m [R,H] f32, l [R,H] f32).
+    """
+    R, H, D = q.shape
+    if scale is None:
+        scale = D ** -0.5
+    if interpret is None:
+        interpret = not _on_tpu()
+    nblk = jnp.sum(table >= 0, axis=1).astype(jnp.int32)
+    qp = _pad_last(q, 128)
+    kp = _pad_last(pool_k, 128)
+    vp = _pad_last(pool_v, 128)
+    o, m, l = paged_micro_attention_kernel(
+        qp, kp, vp, table.astype(jnp.int32), nblk,
+        tail_len.astype(jnp.int32), scale=scale, interpret=interpret)
+    return o[:, :, :D], m, l

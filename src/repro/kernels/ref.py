@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, scale=None, window=0):
+    """Causal (optionally sliding-window) attention.
+
+    q: [B, S, H, D]; k, v: [B, S, K, D] -> [B, S, H, D].
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    if scale is None:
+        scale = D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    s = jnp.einsum("btkgd,bskd->btkgs", qf, k.astype(jnp.float32)) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = kp <= qp
+    if window:
+        ok = ok & (kp > qp - window)
+    s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def paged_micro_attention_ref(q, pool_k, pool_v, table, nblk, last_len,
+                              *, scale=None):
+    """DistAttention MicroAttention over a local paged pool (decode).
+
+    q:        [R, H, D]       one query token per request
+    pool_k/v: [NB, bs, K, D]  this rank's block pool
+    table:    [R, MB] int32   local block ids, -1 padded
+    nblk:     [R] int32       number of valid blocks per request
+    last_len: [R] int32       valid tokens in each request's final block
+    Returns (o [R,H,D] f32 unnormalized, m [R,H] f32, l [R,H] f32) — the
+    MicroAttention partial (paper Eq. 2), mergeable across ranks.
+    """
+    R, H, D = q.shape
+    NB, bs, K, _ = pool_k.shape
+    MB = table.shape[1]
+    if scale is None:
+        scale = D ** -0.5
+    safe = jnp.maximum(table, 0)
+    k = pool_k[safe].reshape(R, MB * bs, K, D)
+    v = pool_v[safe].reshape(R, MB * bs, K, D)
+    j = jnp.arange(MB)[None, :].repeat(R, 0)
+    block_valid = table >= 0
+    within = jnp.arange(bs)[None, None, :]
+    is_last = (j == nblk[:, None] - 1)[..., None]
+    tok_ok = jnp.where(is_last, within < last_len[:, None, None], True)
+    mask = (block_valid[..., None] & tok_ok).reshape(R, MB * bs)
+
+    G = H // K
+    # f32 accumulation WITHOUT materializing f32 copies of the pool
+    # (preferred_element_type on the dots; p cast to the storage dtype).
+    qc = q.astype(k.dtype).reshape(R, K, G, D)
+    s = jnp.einsum("rkgd,rskd->rkgs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - jnp.where(jnp.isneginf(m), 0.0, m)[..., None])
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = jnp.einsum("rkgs,rskd->rkgd", p.astype(k.dtype), v,
+                   preferred_element_type=jnp.float32)
+    l = jnp.sum(p, axis=-1)
+    return (o.reshape(R, H, D), m.reshape(R, H), l.reshape(R, H))

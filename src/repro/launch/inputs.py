@@ -1,0 +1,302 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape x mesh).
+
+``build_cell(arch, shape, mesh)`` returns everything ``dryrun.py`` needs:
+the step function, kwargs of ShapeDtypeStructs, in/out shardings, and
+donate hints — with zero device allocation (weak-type-correct stand-ins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import (batch_axes, param_specs,
+                                        serve_fsdp, serve_pool_axes,
+                                        validate_divisibility)
+from repro.models.model import init_decode_state, init_params
+from repro.serving.sharded_step import (ServeLayout, serve_decode_step,
+                                        serve_decode_step_opt,
+                                        serve_decode_step_state,
+                                        serve_prefill_step,
+                                        serve_prefill_step_state)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (TrainConfig, TrainState,
+                                       init_train_state, train_step)
+
+BLOCK_SIZE = 128            # KV pool block (tokens); MXU-aligned
+
+
+class Cell(NamedTuple):
+    fn: Any                     # callable(**kwargs)
+    kwargs: Dict[str, Any]      # ShapeDtypeStructs
+    in_shardings: Dict[str, Any]
+    out_shardings: Any          # None -> let GSPMD choose
+    donate: Tuple[str, ...]     # kwarg names to donate
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def mesh_axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _layer_constraints(mesh, pspecs):
+    """Per-layer-slice re-pinning functions for each scanned stack.
+
+    Inside a scan body the sliced weights must be constrained back to
+    their (FSDP-)sharded spec, otherwise GSPMD hoists one giant
+    all-gather of the WHOLE stack out of the loop (TBs at kimi scale).
+    """
+    out = {}
+    for name in ("layers", "dense_layers", "moe_layers", "groups"):
+        if not isinstance(pspecs, dict) or name not in pspecs:
+            continue
+        shardings = jax.tree.map(
+            lambda sp: NamedSharding(mesh, P(*tuple(sp)[1:])),
+            pspecs[name], is_leaf=lambda x: isinstance(x, P))
+
+        def fn(lp, sh=shardings):
+            return jax.tree.map(jax.lax.with_sharding_constraint, lp, sh)
+        out[name] = fn
+    return out
+
+
+def _batch_spec(mesh, baxes, n):
+    """Shard batch over baxes only when divisible (long_500k has B=1)."""
+    sizes = mesh_axis_sizes(mesh)
+    total = int(np.prod([sizes[a] for a in baxes]))
+    return P(baxes) if n % total == 0 else P()
+
+
+# ===================================================================== #
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     *, microbatches: Optional[int] = None,
+                     moment_dtype: Optional[str] = None) -> Cell:
+    baxes = batch_axes(mesh)
+    sizes = mesh_axis_sizes(mesh)
+    n_data = int(np.prod([sizes[a] for a in baxes]))
+    # 1T-class models store AdamW moments in bf16 to fit HBM.
+    if moment_dtype is None:
+        moment_dtype = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    if microbatches is None:
+        # Keep per-microbatch activations (incl. MoE dispatch buffers)
+        # within HBM: ~8 for >=100B-class models, else 1.
+        microbatches = 8 if cfg.param_count() > 1e11 else 1
+    ep = n_data if (cfg.is_moe and shape.global_batch % n_data == 0) else 0
+    acfg = AdamWConfig(moment_dtype=moment_dtype)
+    tcfg = TrainConfig(remat=True, microbatches=microbatches,
+                       attn_chunk=1024, moe_ep_groups=ep)
+
+    pshapes = _params_shapes(cfg)
+    pspecs = validate_divisibility(
+        param_specs(cfg, pshapes, fsdp=True, fsdp_axis="data"),
+        pshapes, mesh)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshapes),
+            acfg, tcfg))
+    state_specs = TrainState(
+        params=pspecs,
+        opt=type(state_shapes.opt)(P(), pspecs, pspecs),
+        ef=None)
+
+    B, S = shape.global_batch, shape.seq_len
+    tokens = _sds((B, S + 1), jnp.int32)
+    mask = _sds((B, S), jnp.float32)
+    kwargs = {"state": state_shapes, "tokens": tokens, "mask": mask}
+    in_sh = {"state": _named(mesh, state_specs),
+             "tokens": NamedSharding(mesh, P(baxes)),
+             "mask": NamedSharding(mesh, P(baxes))}
+    if cfg.modality in ("vlm", "audio"):
+        kwargs["embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        in_sh["embeds"] = NamedSharding(mesh, P(baxes))
+
+    fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg, adam_cfg=acfg,
+                           layer_constraints=_layer_constraints(mesh,
+                                                                pspecs))
+    return Cell(fn=fn, kwargs=kwargs, in_shardings=in_sh,
+                out_shardings=None, donate=("state",),
+                meta={"kind": "train", "batch_axes": baxes,
+                      "moment_dtype": moment_dtype})
+
+
+# ===================================================================== #
+def _serve_param_sharding(cfg, mesh):
+    pshapes = _params_shapes(cfg)
+    fsdp = serve_fsdp(cfg, mesh)
+    specs = validate_divisibility(
+        param_specs(cfg, pshapes, fsdp=fsdp, fsdp_axis="data"),
+        pshapes, mesh)
+    return pshapes, specs, fsdp
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Cell:
+    baxes = batch_axes(mesh)
+    paxes = serve_pool_axes(cfg, mesh)
+    layout = ServeLayout(batch_axes=baxes, pool_axes=paxes)
+    sizes = mesh_axis_sizes(mesh)
+    NP = int(np.prod([sizes[a] for a in paxes]))
+    B, S = shape.global_batch, shape.seq_len
+    bspec = _batch_spec(mesh, baxes, B)
+
+    pshapes, pspecs, fsdp = _serve_param_sharding(cfg, mesh)
+    if cfg.family in ("hybrid", "ssm"):
+        # No KV pool: forward + recurrent/window state (DESIGN.md).
+        kwargs = {"params": pshapes, "tokens": _sds((B, S), jnp.int32)}
+        in_sh = {"params": _named(mesh, pspecs),
+                 "tokens": NamedSharding(mesh, bspec)}
+        fn = functools.partial(serve_prefill_step_state, cfg=cfg,
+                               layout=layout,
+                               max_len=min(S, cfg.local_window or 1))
+        return Cell(fn=fn, kwargs=kwargs, in_shardings=in_sh,
+                    out_shardings=None, donate=(),
+                    meta={"kind": "prefill_state", "fsdp": fsdp})
+    kwargs = {"params": pshapes}
+    in_sh = {"params": _named(mesh, pspecs)}
+    if cfg.modality in ("vlm", "audio"):
+        kwargs["embeds"] = _sds((B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        in_sh["embeds"] = NamedSharding(mesh, bspec)
+        kwargs["tokens"] = None
+        in_sh["tokens"] = None
+    else:
+        kwargs["tokens"] = _sds((B, S), jnp.int32)
+        in_sh["tokens"] = NamedSharding(mesh, bspec)
+
+    n_data = int(np.prod([sizes[a] for a in baxes]))
+    seq_parallel = os.environ.get("REPRO_SP", "0") == "1"
+    fn = functools.partial(serve_prefill_step, cfg=cfg, layout=layout,
+                           block_size=BLOCK_SIZE, NP=NP, n_data=n_data,
+                           seq_parallel=seq_parallel,
+                           layer_constraints=(_layer_constraints(mesh,
+                                                                 pspecs)
+                                              if fsdp else None))
+    kvh = None if "model" in paxes else "model"
+    pool_spec = NamedSharding(mesh, P(None, paxes, None, None, kvh, None))
+    return Cell(fn=fn, kwargs=kwargs, in_shardings=in_sh,
+                out_shardings=(NamedSharding(mesh, bspec), pool_spec,
+                               pool_spec),
+                donate=(),
+                meta={"kind": "prefill", "pool_axes": paxes,
+                      "NP": NP, "fsdp": fsdp})
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      variant: str = "baseline") -> Cell:
+    baxes = batch_axes(mesh)
+    R, S = shape.global_batch, shape.seq_len
+    sizes = mesh_axis_sizes(mesh)
+    pshapes, pspecs, fsdp = _serve_param_sharding(cfg, mesh)
+
+    if cfg.family in ("dense", "moe"):
+        paxes = serve_pool_axes(cfg, mesh)
+        layout = ServeLayout(batch_axes=baxes, pool_axes=paxes)
+        NP = int(np.prod([sizes[a] for a in paxes]))
+        bs = BLOCK_SIZE
+        blocks_per_req = -(-S // bs)
+        MB = -(-blocks_per_req // NP) + 1
+        NB = max(1, -(-R * blocks_per_req // NP))
+        L = cfg.num_layers
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+
+        pool = _sds((L, NP, NB + 1, bs, K, hd), dt)
+        kvh = None if "model" in paxes else "model"
+        pool_spec = NamedSharding(mesh, P(None, paxes, None, None, kvh,
+                                          None))
+        itab = NamedSharding(mesh, P(paxes))
+        kwargs = {
+            "params": pshapes, "pool_k": pool, "pool_v": pool,
+            "tables": _sds((NP, R, MB), jnp.int32),
+            "nblk": _sds((NP, R), jnp.int32),
+            "tails": _sds((NP, R), jnp.int32),
+            "wblk": _sds((NP, R), jnp.int32),
+            "woff": _sds((NP, R), jnp.int32),
+            "tokens": _sds((R,), jnp.int32),
+            "lens": _sds((R,), jnp.int32),
+        }
+        in_sh = {"params": _named(mesh, pspecs),
+                 "pool_k": pool_spec, "pool_v": pool_spec,
+                 "tables": itab, "nblk": itab, "tails": itab,
+                 "wblk": itab, "woff": itab,
+                 "tokens": NamedSharding(mesh, _batch_spec(mesh, baxes, R)),
+                 "lens": NamedSharding(mesh, _batch_spec(mesh, baxes, R))}
+        step = (serve_decode_step_opt if variant == "opt"
+                else serve_decode_step)
+        fn = functools.partial(
+            step, cfg=cfg, layout=layout,
+            layer_constraints=(_layer_constraints(mesh, pspecs)
+                               if fsdp else None))
+        return Cell(fn=fn, kwargs=kwargs, in_shardings=in_sh,
+                    out_shardings=(NamedSharding(mesh,
+                                                 _batch_spec(mesh, baxes, R)),
+                                   pool_spec, pool_spec),
+                    donate=("pool_k", "pool_v"),
+                    meta={"kind": "decode", "pool_axes": paxes, "NP": NP,
+                          "NB": NB, "MB": MB, "fsdp": fsdp,
+                          "mode": ("seq_model" if "model" in paxes
+                                   else "tp_head")})
+
+    # hybrid / ssm: O(1) recurrent state (+ bounded window cache)
+    layout = ServeLayout(batch_axes=baxes, pool_axes=baxes)
+    bspec = _batch_spec(mesh, baxes, R)
+    bax = tuple(bspec)[0] if len(bspec) else None
+    state_shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, R, max_len=min(
+            S, cfg.local_window or 1)))
+    dstate_specs = jax.tree.map(
+        lambda s: P(None, bax) if s.ndim >= 2 and s.shape[1] == R
+        else (P(bax) if s.ndim >= 1 and s.shape[0] == R else P()),
+        state_shapes)
+    # mLSTM states are [ng, se-1, B, ...]: batch at axis 2.
+    if cfg.family == "ssm":
+        dstate_specs = dstate_specs._replace(
+            rec={"mlstm": type(state_shapes.rec["mlstm"])(
+                *[P(None, None, bax) for _ in state_shapes.rec["mlstm"]]),
+                "slstm": type(state_shapes.rec["slstm"])(
+                *[P(None, bax) for _ in state_shapes.rec["slstm"]])})
+    kwargs = {"params": pshapes, "state": state_shapes,
+              "tokens": _sds((R,), jnp.int32)}
+    in_sh = {"params": _named(mesh, pspecs),
+             "state": _named(mesh, dstate_specs),
+             "tokens": NamedSharding(mesh, bspec)}
+    fn = functools.partial(serve_decode_step_state, cfg=cfg, layout=layout)
+    return Cell(fn=fn, kwargs=kwargs, in_shardings=in_sh,
+                out_shardings=None, donate=("state",),
+                meta={"kind": "decode_state", "fsdp": fsdp})
+
+
+# ===================================================================== #
+def build_cell(arch: str, shape_name: str, mesh, **kw) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh, **kw)
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> Dict[str, Any]:
+    """Public API: ShapeDtypeStruct stand-ins for every model input."""
+    return build_cell(arch, shape_name, mesh).kwargs

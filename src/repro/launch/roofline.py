@@ -1,0 +1,256 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+  compute    = HLO_FLOPs        / (chips * peak_FLOP/s)
+  memory     = HLO_bytes        / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD ``compiled.as_text()`` by summing operand sizes
+of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per-device program -> per-chip bytes).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.hardware import V5E, HardwareSpec
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_OP_RE = re.compile(r"%?[\w.\-]+\s*=\s*(\(?[a-z0-9,\[\]\{\}\s]+\)?)\s+"
+                    r"([a-z\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """{name: [lines]} per HLO computation; also returns the ENTRY name.
+
+    Computation headers look like
+      ``%region_0.1_spmd (param: (...)) -> (...) {`` or
+      ``ENTRY %main.3_spmd (param.2: f32[4,64], ...) -> f32[4,64] {``;
+    bodies are indented and terminated by a lone ``}``.
+    """
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_RE.match(s)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        comps[cur].append(s)
+    return comps, entry
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum OUTPUT-shape bytes of each collective op kind in per-device HLO,
+    multiplying ops inside While bodies by their trip count (scan-over-
+    layers puts one textual copy of each per-layer collective inside a
+    While whose condition compares against constant(L)).
+
+    Result bytes are what each device moves per call up to the ring
+    (n-1)/n factor.
+    """
+    comps, entry = _split_computations(hlo_text)
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    if entry is None:
+        return out
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(x) for line in comps.get(cond_name, ())
+                  for x in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    seen = set()
+
+    def walk(name: str, mult: int):
+        key = (name, mult)
+        if key in seen or name not in comps:
+            return
+        seen.add(key)
+        for s in comps[name]:
+            m = _OP_RE.match(s)
+            if m:
+                op = m.group(2)
+                hits = [c for c in _COLLECTIVES if op.startswith(c)]
+                if hits and not op.endswith("-done"):
+                    out[hits[0]] += _shape_bytes(m.group(1)) * mult
+            w = _WHILE_RE.search(s)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                walk(body, mult * trip_count(cond))
+                continue
+            # conditionals / branches (rare in our programs)
+            for ref in re.findall(r"(?:branch_computations=\{|to_apply=)"
+                                  r"%?([\w.\-]+)", s):
+                if ref in comps and any(
+                        c in " ".join(comps[ref])
+                        for c in _COLLECTIVES):
+                    walk(ref, mult)
+    walk(entry, 1)
+    return out
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: Dict[str, int]
+    peak_memory_per_device: float
+    model_flops: float                  # 6ND train / 2ND serve (useful)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_flops_ratio: float = 0.0
+    roofline_fraction: float = 0.0      # useful work / dominant-term bound
+
+    model_bytes: float = 0.0            # mandatory traffic (see below)
+
+    def finalize(self, hw: HardwareSpec = V5E):
+        self.t_compute = self.flops_per_device / hw.peak_flops_bf16
+        self.t_memory = self.bytes_per_device / hw.hbm_bw
+        self.t_collective = self.collective_bytes_per_device / hw.ici_link_bw
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_per_device * self.chips
+        self.useful_flops_ratio = (self.model_flops / total_hlo_flops
+                                   if total_hlo_flops else 0.0)
+        # Roofline fraction: the step time a perfect implementation needs
+        # (max of compute-at-peak on useful FLOPs and HBM-at-peak on
+        # mandatory bytes) over the dominant-term time implied by the HLO.
+        ideal_c = self.model_flops / (self.chips * hw.peak_flops_bf16)
+        ideal_m = self.model_bytes / (self.chips * hw.hbm_bw)
+        ideal = max(ideal_c, ideal_m)
+        dom = max(terms.values())
+        self.roofline_fraction = min(1.0, ideal / dom) if dom else 0.0
+        return self
+
+
+def model_useful_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N_active*D for train, 2*N_active*D forward-only (+ attention)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        base = 6.0 * n * D
+    elif shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        base = 2.0 * n * D
+    else:                                  # decode: one token per request
+        D = shape.global_batch
+        base = 2.0 * n * D
+    # Attention score/value FLOPs (not in N):
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.layer_kind(i) == "attn")
+    h, hd = cfg.num_heads, cfg.head_dim
+    if shape.kind in ("train", "prefill"):
+        w = cfg.local_window or shape.seq_len
+        ctx = min(w, shape.seq_len)
+        att = 4.0 * shape.global_batch * shape.seq_len * ctx / 2 * h * hd \
+            * n_attn
+        att *= 3 if shape.kind == "train" else 1
+    else:
+        w = cfg.local_window or shape.seq_len
+        ctx = min(w, shape.seq_len)
+        att = 4.0 * shape.global_batch * ctx * h * hd * n_attn
+    return base + att
+
+
+def model_mandatory_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                          bpe: int = 2) -> float:
+    """Minimum HBM traffic a perfect implementation must move (global).
+
+    decode : active params once + the whole KV pool once (+ tiny I/O).
+    prefill: params once + KV written once + ~2 activation passes.
+    train  : params + grads + moments r/w (8N f32-equiv @4B treated as
+             6N*bpe + 8N*4 conservative) + ~4 activation passes w/ remat.
+    """
+    n = cfg.active_param_count()
+    act_bytes = (shape.global_batch * shape.seq_len * cfg.d_model * bpe)
+    kv = cfg.kv_bytes_per_token(bpe)
+    if shape.kind == "decode":
+        ctx = min(cfg.local_window or shape.seq_len, shape.seq_len)
+        return n * bpe + shape.global_batch * ctx * kv
+    if shape.kind == "prefill":
+        return n * bpe + shape.global_batch * shape.seq_len * kv \
+            + 2 * act_bytes * cfg.num_layers
+    return (2 * n * bpe + 8 * n * 4.0 / 4.0          # p,g bf16 + m,v f32
+            + 4 * act_bytes * cfg.num_layers)
+
+
+def analyze(arch: str, shape: ShapeConfig, mesh_name: str, chips: int,
+            cost: dict, mem: dict, hlo_text: str,
+            cfg: ModelConfig) -> RooflineReport:
+    coll = collective_bytes_from_hlo(hlo_text)
+    rep = RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(sum(coll.values())),
+        collective_breakdown=coll,
+        peak_memory_per_device=float(mem.get("temp_size_in_bytes", 0)
+                                     + mem.get("argument_size_in_bytes", 0)
+                                     + mem.get("output_size_in_bytes", 0)),
+        model_flops=model_useful_flops(cfg, shape),
+        model_bytes=model_mandatory_bytes(cfg, shape),
+    )
+    return rep.finalize()
+
+
+def report_row(r: RooflineReport) -> str:
+    return (f"{r.arch},{r.shape},{r.mesh},{r.chips},"
+            f"{r.flops_per_device:.3e},{r.bytes_per_device:.3e},"
+            f"{r.collective_bytes_per_device:.3e},"
+            f"{r.t_compute:.3e},{r.t_memory:.3e},{r.t_collective:.3e},"
+            f"{r.bottleneck},{r.useful_flops_ratio:.3f},"
+            f"{r.roofline_fraction:.3f},{r.peak_memory_per_device:.3e}")
+
+
+REPORT_HEADER = ("arch,shape,mesh,chips,flops_dev,bytes_dev,coll_bytes_dev,"
+                 "t_compute,t_memory,t_collective,bottleneck,"
+                 "useful_flops_ratio,roofline_fraction,peak_mem_dev")

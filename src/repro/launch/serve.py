@@ -1,0 +1,69 @@
+"""Serving launcher: run an Infinite-LLM cluster on synthetic traffic
+(smoke configs, CPU) or AOT-compile the production serve step.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
+      --instances 3 --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-15b \
+      --aot --shape decode_32k
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--long-frac", type=float, default=0.2,
+                    help="fraction of requests that exceed one instance")
+    ap.add_argument("--aot", action="store_true")
+    ap.add_argument("--shape", default="decode_32k",
+                    choices=["prefill_32k", "decode_32k", "long_500k"])
+    args = ap.parse_args()
+
+    if args.aot:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count"
+                                   "=512")
+        from repro.launch.dryrun import run_cell
+        run_cell(args.arch, args.shape)
+        return
+
+    import jax
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    from repro.serving import Cluster, Request, RequestState, \
+        SamplingParams
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    cl = Cluster(params, cfg, n_instances=args.instances, max_batch=3,
+                 max_local_len=32, pool_blocks=48, block_size=8,
+                 move_chunk_tokens=8)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        n = int(rng.integers(40, 70)) if rng.random() < args.long_frac \
+            else int(rng.integers(4, 20))
+        reqs.append(Request(
+            prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
+            sampling=SamplingParams(max_new_tokens=args.max_new)))
+        cl.submit(reqs[-1])
+    t0 = time.time()
+    steps = cl.run_until_done(max_steps=500)
+    dt = time.time() - t0
+    done = sum(r.state == RequestState.FINISHED for r in reqs)
+    toks = sum(len(r.output) for r in reqs)
+    st = cl.throughput_stats
+    print(f"{done}/{len(reqs)} finished, {toks} tokens in {steps} steps "
+          f"({dt:.1f}s wall on CPU)")
+    print(f"KV moved {st['kv_moved_bytes'] / 1024:.1f} KiB; "
+          f"query/merge traffic {st['query_shipped_bytes'] / 1024:.1f} KiB")
+
+
+if __name__ == "__main__":
+    main()

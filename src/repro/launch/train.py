@@ -1,0 +1,75 @@
+"""Training launcher: real steps on local devices, or AOT-compile the
+production-mesh program (CPU host) for any assigned arch.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --steps 20 --seq 256 --batch 4 --smoke          # real CPU steps
+  PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --aot
+"""
+import argparse
+import dataclasses
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-trainable)")
+    ap.add_argument("--aot", action="store_true",
+                    help="AOT-compile the production train_step instead "
+                         "of running (sets 512 fake devices)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    if args.aot:
+        import os
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count"
+                                   "=512")
+        from repro.launch.dryrun import run_cell
+        run_cell(args.arch, "train_4k")
+        return
+
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import Checkpointer, save_train_state
+    from repro.configs import get_config, get_smoke_config
+    from repro.models.model import init_params
+    from repro.training.data import DataConfig, batch_for_step
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_step import (TrainConfig, init_train_state,
+                                           train_step)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    acfg = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 10),
+                       total_steps=args.steps)
+    tcfg = TrainConfig(remat=True)
+    state = init_train_state(params, acfg, tcfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch, seed=0)
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    step_fn = jax.jit(lambda s, t, m: train_step(
+        s, t, m, cfg=cfg, tcfg=tcfg, adam_cfg=acfg))
+    t0 = time.time()
+    for step in range(args.steps):
+        toks, mask = batch_for_step(dc, step)
+        state, out = step_fn(state, jnp.asarray(toks), jnp.asarray(mask))
+        if step % max(1, args.steps // 10) == 0:
+            print(f"step {step:5d}  loss {float(out['loss']):.4f}  "
+                  f"gnorm {float(out['grad_norm']):.3f}  "
+                  f"{time.time() - t0:.0f}s")
+        if ckpt and step and step % 50 == 0:
+            save_train_state(ckpt, step, state)
+    print(f"done: final loss {float(out['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,288 @@
+"""Prefill-into-cache and the distributed decode step (dense/moe).
+
+``prefill`` runs the full-sequence forward while capturing per-layer KV
+(and recurrent states) into a ``DecodeState`` so generation can continue
+token-by-token. ``decode_step_dist`` is the DistAttention-aware decode:
+each request's KV may be split between a *local* ring cache (the tail
+span ``[start, len)``) and *remote* spans held by creditor instances; the
+attention result is the LSE-merge of the local partial and the remote
+partial (paper Eq. 3). The cluster runtime (``repro.serving.cluster``)
+feeds the remote KV in; the mesh version uses collectives instead
+(``repro.serving.sharded_step``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.online_softmax import (combine, finalize,
+                                       micro_attention_decode)
+from repro.models.attention import apply_attention_train, make_causal_core, \
+    qkv_project
+from repro.models.common import apply_ffn, apply_norm
+from repro.models.model import (DecodeState, _attn_layer_fwd, _layer_params,
+                                _rglru_layer_fwd, embed_tokens,
+                                init_decode_state, unembed)
+from repro.models.moe import apply_moe
+from repro.models.rglru import apply_rglru_block
+from repro.models.xlstm import (MLstmState, SLstmState, apply_mlstm_block,
+                                apply_slstm_block)
+
+
+# ===================================================================== #
+# Prefill
+# ===================================================================== #
+def _ring_fill(cache, k, T, maxlen):
+    """Write the last min(T, maxlen) tokens of k [B,T,K,hd] into ring cache
+    [B, maxlen, K, hd] at slots (abs_pos % maxlen)."""
+    B = k.shape[0]
+    n = min(T, maxlen)
+    p0 = T - n
+    abs_pos = p0 + jnp.arange(n)
+    slots = abs_pos % maxlen
+    return cache.at[:, slots].set(k[:, p0:p0 + n])
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *,
+            max_len: int, backend: str = "xla", chunk: int = 512,
+            capacity_factor: float = -1.0,
+            ) -> Tuple[jax.Array, DecodeState]:
+    """Uniform-length prefill. Returns (logits_last [B,V], DecodeState).
+
+    The DecodeState local cache keeps the LAST min(T, max_len) tokens
+    (ring layout); the caller is responsible for placing the overflowed
+    prefix [0, T-max_len) on creditor instances (``start`` bookkeeping
+    lives in the serving runtime).
+    """
+    B, T = (tokens.shape if embeds is None else embeds.shape[:2])
+    positions = jnp.arange(T, dtype=jnp.int32)[None].repeat(B, 0)
+    x = embed_tokens(params, cfg, tokens, embeds, positions)
+    core = make_causal_core(cfg, backend=backend, chunk=chunk)
+    state = init_decode_state(cfg, B, max_len)
+    lens = jnp.full((B,), T, jnp.int32)
+
+    if cfg.family in ("dense", "moe"):
+        def make_body(moe):
+            def body(x, lp):
+                x, kv, _ = _attn_layer_fwd(lp, x, positions, cfg, core,
+                                           moe=moe,
+                                           capacity_factor=capacity_factor)
+                return x, kv
+            return body
+        if cfg.family == "dense":
+            x, (ks, vs) = jax.lax.scan(make_body(False), x, params["layers"])
+        else:
+            nd = cfg.first_k_dense
+            kds = vds = None
+            if nd:
+                x, (kds, vds) = jax.lax.scan(make_body(False), x,
+                                             params["dense_layers"])
+            x, (kms, vms) = jax.lax.scan(make_body(True), x,
+                                         params["moe_layers"])
+            ks = jnp.concatenate([kds, kms], 0) if nd else kms
+            vs = jnp.concatenate([vds, vms], 0) if nd else vms
+        # ks: [L, B, T, K, hd] -> ring-fill each layer.
+        fill = jax.vmap(lambda c, k: _ring_fill(c, k, T, max_len))
+        state = state._replace(kv_k=fill(state.kv_k, ks),
+                               kv_v=fill(state.kv_v, vs), lens=lens)
+
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        wcore = make_causal_core(cfg, backend=backend, chunk=chunk,
+                                 window=cfg.local_window)
+        w = state.kv_k.shape[2]
+
+        def gbody(x, gp):
+            kvs = []
+            rec = []
+            for j, kind in enumerate(pat):
+                lp = gp[f"{j}_{kind}"]
+                if kind == "rglru":
+                    x, st = _rglru_layer_fwd(lp, x, cfg)
+                    rec.append(st)
+                else:
+                    x, kv, _ = _attn_layer_fwd(lp, x, positions, cfg, wcore)
+                    kvs.append(kv)
+            return x, (kvs, rec)
+        x, (kvs, rec) = jax.lax.scan(gbody, x, params["groups"])
+        # kvs: list (per attn slot in pattern) of (k [G,B,T,K,hd], v).
+        n_left = cfg.num_layers - (cfg.num_layers // len(pat)) * len(pat)
+        left_rec = []
+        if n_left:
+            for j, kind in enumerate(pat[:n_left]):
+                lp = params["leftover"][f"{j}_{kind}"]
+                assert kind == "rglru"
+                x, st = _rglru_layer_fwd(lp, x, cfg)
+                left_rec.append(st)
+        ks = jnp.concatenate([kv[0] for kv in kvs], 0)   # [n_attn,B,T,K,hd]
+        vs = jnp.concatenate([kv[1] for kv in kvs], 0)
+        fill = jax.vmap(lambda c, k: _ring_fill(c, k, T, w))
+        # rec from the group scan: each element r = (conv [ng,B,3,w], h
+        # [ng,B,w]); leftover layers contribute unstacked (B,...) states.
+        convs = [r[0] for r in rec] + [r[0][None] for r in left_rec]
+        hs = [r[1] for r in rec] + [r[1][None] for r in left_rec]
+        conv = jnp.concatenate(convs, 0)
+        h = jnp.concatenate(hs, 0)
+        state = state._replace(kv_k=fill(state.kv_k, ks),
+                               kv_v=fill(state.kv_v, vs),
+                               lens=lens, rec=(conv, h))
+
+    elif cfg.family == "ssm":
+        def gbody(x, gp):
+            def mbody(x, mlp):
+                hh = apply_norm(mlp["ln"], x, cfg)
+                y, st = apply_mlstm_block(mlp["blk"], hh, cfg)
+                return x + y, tuple(st)
+            x, mst = jax.lax.scan(mbody, x, gp["mlstm"])
+            hh = apply_norm(gp["slstm"]["ln"], x, cfg)
+            y, sst = apply_slstm_block(gp["slstm"]["blk"], hh, cfg)
+            return x + y, (mst, tuple(sst))
+        x, (mst, sst) = jax.lax.scan(gbody, x, params["groups"])
+        state = state._replace(lens=lens,
+                               rec={"mlstm": MLstmState(*mst),
+                                    "slstm": SLstmState(*sst)})
+    else:
+        raise ValueError(cfg.family)
+
+    logits = unembed(params, cfg, x[:, -1])
+    return logits, state
+
+
+# ===================================================================== #
+# Slot management (engine batches individual prefills into fixed slots)
+# ===================================================================== #
+def batch_axis_map(cfg: ModelConfig):
+    """Batch-axis index for each DecodeState field's arrays."""
+    if cfg.family in ("dense", "moe"):
+        return {"kv": 1, "rec": None}
+    if cfg.family == "hybrid":
+        return {"kv": 1, "rec": 1}
+    return {"kv": None, "rec": {"mlstm": 2, "slstm": 1}}
+
+
+def write_slot(state: DecodeState, slot: int, req: DecodeState,
+               cfg: ModelConfig) -> DecodeState:
+    """Copy a single-request (B=1) DecodeState into batch slot ``slot``."""
+    ax = batch_axis_map(cfg)
+
+    def put(dst, src, axis):
+        idx = [slice(None)] * dst.ndim
+        idx[axis] = slot
+        src_idx = [slice(None)] * src.ndim
+        src_idx[axis] = 0
+        return dst.at[tuple(idx)].set(src[tuple(src_idx)])
+
+    kv_k, kv_v, rec = state.kv_k, state.kv_v, state.rec
+    if state.kv_k is not None:
+        # Ring layouts may differ if max_len differs; require equal here.
+        assert state.kv_k.shape[2] == req.kv_k.shape[2], \
+            "slot and request cache sizes must match"
+        kv_k = put(state.kv_k, req.kv_k, ax["kv"])       # [L, B, ...]
+        kv_v = put(state.kv_v, req.kv_v, ax["kv"])
+    if state.rec is not None:
+        if cfg.family == "hybrid":
+            rec = (put(state.rec[0], req.rec[0], ax["rec"]),  # [n_rg,B,3,w]
+                   put(state.rec[1], req.rec[1], ax["rec"]))
+        else:
+            rec = {
+                "mlstm": MLstmState(*[put(d, s, ax["rec"]["mlstm"])
+                                      for d, s in zip(state.rec["mlstm"],
+                                                      req.rec["mlstm"])]),
+                "slstm": SLstmState(*[put(d, s, ax["rec"]["slstm"])
+                                      for d, s in zip(state.rec["slstm"],
+                                                      req.rec["slstm"])]),
+            }
+    lens = state.lens.at[slot].set(req.lens[0])
+    return DecodeState(kv_k, kv_v, lens, rec)
+
+
+# ===================================================================== #
+# Distributed decode step (dense/moe): local ring span + remote spans
+# ===================================================================== #
+def _ring_mask(length, start, maxlen):
+    """[B, maxlen] validity for ring slots holding abs pos in [start, len).
+
+    ``length``: [B] sequence length AFTER the current token's write. Slot j
+    holds absolute position p = (len-1) - ((len-1-j) mod maxlen); it is
+    valid iff p >= max(start, 0).
+    """
+    j = jnp.arange(maxlen, dtype=jnp.int32)[None]
+    last = (length - 1)[:, None]
+    p = last - ((last - j) % maxlen)
+    return (p >= start[:, None]) & (p >= 0)
+
+
+def _dist_attn_decode(lp, x, ck, cv, lens, start, rk, rv, rlen, cfg):
+    """Local ring partial + remote span partial, merged (paper Eq. 3)."""
+    B = x.shape[0]
+    q, k, v = qkv_project(lp, x, lens[:, None], cfg)
+    ql = q[:, 0]
+    maxlen = ck.shape[1]
+    slot = lens % maxlen
+    ck = ck.at[jnp.arange(B), slot].set(k[:, 0])
+    cv = cv.at[jnp.arange(B), slot].set(v[:, 0])
+    lmask = _ring_mask(lens + 1, jnp.maximum(start, 0), maxlen)
+    local = micro_attention_decode(ql, ck, cv, lmask)
+    rmask = (jnp.arange(rk.shape[1], dtype=jnp.int32)[None]
+             < rlen[:, None])
+    remote = micro_attention_decode(ql, rk, rv, rmask)
+    o, m, l = combine(local, remote)
+    out = finalize(o, l)
+    out = out.reshape(B, 1, -1).astype(x.dtype) @ lp["wo"]
+    return out, ck, cv
+
+
+def decode_step_dist(params, cfg: ModelConfig, state: DecodeState,
+                     tokens: jax.Array, start: jax.Array,
+                     remote_k: jax.Array, remote_v: jax.Array,
+                     remote_len: jax.Array
+                     ) -> Tuple[jax.Array, DecodeState]:
+    """DistAttention decode for dense/moe: KV = local[start, len) + remote.
+
+    remote_k/v: [L, B, S_r, K, hd] concatenated creditor spans (token
+    positions [0, start)); remote_len: [B] valid remote tokens.
+    """
+    assert cfg.family in ("dense", "moe"), "only attention archs pool KV"
+    B = tokens.shape[0]
+    lens = state.lens
+    x = embed_tokens(params, cfg, tokens[:, None], None,
+                     positions=lens[:, None])
+
+    def make_body(moe):
+        def body(x, xs):
+            lp, ck, cv, rk, rv = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            out, ck, cv = _dist_attn_decode(lp["attn"], h, ck, cv, lens,
+                                            start, rk, rv, remote_len, cfg)
+            x = x + out
+            h = apply_norm(lp["ln2"], x, cfg)
+            if moe:
+                x = x + apply_moe(lp["moe"], h, cfg, capacity_factor=-1.0)
+            else:
+                x = x + apply_ffn(lp["ffn"], h, cfg)
+            return x, (ck, cv)
+        return body
+
+    if cfg.family == "dense":
+        x, (ck, cv) = jax.lax.scan(
+            make_body(False), x,
+            (params["layers"], state.kv_k, state.kv_v, remote_k, remote_v))
+    else:
+        nd = cfg.first_k_dense
+        if nd:
+            x, (ckd, cvd) = jax.lax.scan(
+                make_body(False), x,
+                (params["dense_layers"], state.kv_k[:nd], state.kv_v[:nd],
+                 remote_k[:nd], remote_v[:nd]))
+        x, (ckm, cvm) = jax.lax.scan(
+            make_body(True), x,
+            (params["moe_layers"], state.kv_k[nd:], state.kv_v[nd:],
+             remote_k[nd:], remote_v[nd:]))
+        ck = jnp.concatenate([ckd, ckm], 0) if nd else ckm
+        cv = jnp.concatenate([cvd, cvm], 0) if nd else cvm
+
+    logits = unembed(params, cfg, x[:, 0])
+    return logits, DecodeState(ck, cv, lens + 1, None)

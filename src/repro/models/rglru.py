@@ -1,0 +1,130 @@
+"""Griffin/RecurrentGemma recurrent block: Conv1D(4) + RG-LRU, gated.
+
+Block: x -> { gate branch: linear -> GeLU } * { recurrent branch:
+linear -> causal Conv1D(width 4) -> RG-LRU } -> linear out.
+
+RG-LRU (real-gated linear recurrent unit):
+    r_t = sigmoid(W_r x_t + b_r)          recurrence gate
+    i_t = sigmoid(W_i x_t + b_i)          input gate
+    a_t = exp(c * r_t * log_sigmoid(L))   L learnable, c = -8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (TPU-friendly
+log-depth); decode is the O(1)-state recurrent step — the reason
+DistAttention has nothing to pool for these layers (DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+_C = 8.0
+_CONV_W = 4
+
+
+def init_rglru_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(L)^(c*r) sits in [0.9, 0.999] (Griffin).
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    log_sig_l = jnp.log(u ** (1.0 / _C))  # log(sigmoid(L)) implicitly
+    return {
+        "w_gate": dense_init(ks[0], d, w, dtype),
+        "w_rec_in": dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (_CONV_W, w), jnp.float32)
+                   * 0.1).astype(dtype),
+        "w_r": dense_init(ks[3], w, w, dtype),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "log_sig_lambda": log_sig_l,                 # [w] f32
+        "w_out": dense_init(jax.random.fold_in(key, 7), w, d, dtype),
+    }
+
+
+def _gates(p, x):
+    """x: [..., w] (conv output) -> (log_a [..., w] f32, gated_in)."""
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = _C * r * p["log_sig_lambda"]             # <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i \
+        * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None):
+    """Parallel RG-LRU over [B, T, w] via associative scan. Returns (y, h_T)."""
+    B, T, w = x.shape
+    log_a, gated = _gates(p, x)                      # [B, T, w] f32
+    if h0 is not None:
+        # Fold the carry in as a virtual step 0 with a=1 contribution.
+        log_a = jnp.concatenate([jnp.zeros((B, 1, w)), log_a], 1)
+        gated = jnp.concatenate([h0.astype(jnp.float32)[:, None], gated], 1)
+
+    def op(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    la, h = jax.lax.associative_scan(op, (log_a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x: jax.Array, h: jax.Array):
+    """Single decode step. x: [B, w] conv output, h: [B, w] f32 state."""
+    log_a, gated = _gates(p, x[:, None])
+    h_new = jnp.exp(log_a[:, 0]) * h + gated[:, 0]
+    return h_new.astype(x.dtype), h_new
+
+
+def causal_conv1d(p, x: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv width 4 over [B, T, w]; carry [B, 3, w]."""
+    B, T, w = x.shape
+    if carry is None:
+        carry = jnp.zeros((B, _CONV_W - 1, w), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)         # [B, T+3, w]
+    out = jnp.zeros((B, T, w), jnp.float32)
+    for i in range(_CONV_W):
+        out = out + xp[:, i:i + T].astype(jnp.float32) \
+            * p["conv_w"][i].astype(jnp.float32)
+    return out.astype(x.dtype), xp[:, -( _CONV_W - 1):]
+
+
+def apply_rglru_block(p, x: jax.Array, cfg: ModelConfig,
+                      state: Tuple[jax.Array, jax.Array] | None = None,
+                      *, decode: bool = False):
+    """Full Griffin recurrent block. x: [B, T, d].
+
+    state = (conv_carry [B,3,w], lru_h [B,w]); returns (y, new_state).
+    """
+    gate = jax.nn.gelu(x @ p["w_gate"])              # [B, T, w]
+    rec = x @ p["w_rec_in"]
+    if decode:
+        conv_carry, h = state
+        rec_c, conv_carry = causal_conv1d(p, rec, conv_carry)
+        y_rec, h = rglru_step(p, rec_c[:, 0], h)
+        y_rec = y_rec[:, None]
+    else:
+        if state is None:
+            conv_carry, h0 = None, None
+        else:
+            conv_carry, h0 = state
+        rec_c, conv_carry = causal_conv1d(p, rec, conv_carry)
+        y_rec, h = rglru_scan(p, rec_c, h0)
+    y = (gate * y_rec) @ p["w_out"]
+    return y, (conv_carry, h)
+
+
+def rglru_state_shape(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return ((batch, _CONV_W - 1, w), (batch, w))

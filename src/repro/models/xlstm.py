@@ -1,0 +1,196 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM (Beck et al. 2024): per head h, matrix memory C in R^{hd x hd}:
+    i_t = exp(w_i x_t), f_t = exp(w_f x_t) (log-domain stabilized by m_t)
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    out_t = C_t q_t / max(|n_t . q_t|, 1)
+
+State is O(1) in sequence length — the assigned-pool case where
+DistAttention is *inapplicable* (nothing grows, nothing to pool).
+
+sLSTM keeps recurrent (h -> gate) connections so it is inherently
+sequential; both train paths use ``jax.lax.scan`` over time.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+# --------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------- #
+class MLstmState(NamedTuple):
+    c: jax.Array   # [B, nh, hd, hd] f32
+    n: jax.Array   # [B, nh, hd] f32
+    m: jax.Array   # [B, nh] f32 (log-domain stabilizer)
+
+
+def init_mlstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    up = int(d * cfg.mlstm_proj_factor)
+    nh = cfg.num_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, up, dtype),
+        "w_gate": dense_init(ks[1], d, up, dtype),
+        "wq": dense_init(ks[2], up, up, dtype),
+        "wk": dense_init(ks[3], up, up, dtype),
+        "wv": dense_init(ks[4], up, up, dtype),
+        "w_if": dense_init(ks[5], up, 2 * nh, dtype),   # input+forget gates
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]),
+        "gn_scale": jnp.ones((up,), jnp.float32),
+        "w_down": dense_init(ks[6], up, d, dtype),
+    }
+
+
+def _mlstm_qkvg(p, x_up, nh):
+    B, T, up = x_up.shape
+    hd = up // nh
+    q = (x_up @ p["wq"]).reshape(B, T, nh, hd).astype(jnp.float32)
+    k = (x_up @ p["wk"]).reshape(B, T, nh, hd).astype(jnp.float32) \
+        * (hd ** -0.5)
+    v = (x_up @ p["wv"]).reshape(B, T, nh, hd).astype(jnp.float32)
+    gif = (x_up @ p["w_if"]).astype(jnp.float32) + p["b_if"]
+    log_i, log_f = gif[..., :nh], jax.nn.log_sigmoid(gif[..., nh:])
+    return q, k, v, log_i, log_f
+
+
+def mlstm_step(q, k, v, log_i, log_f, state: MLstmState):
+    """One recurrent step; all inputs [B, nh, ...] f32."""
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i = jnp.exp(log_i - m_new)
+    f = jnp.exp(log_f + state.m - m_new)
+    c = f[..., None, None] * state.c + i[..., None, None] \
+        * (v[..., :, None] * k[..., None, :])           # [B,nh,hd,hd]
+    n = f[..., None] * state.n + i[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", c, q)             # note c stores v k^T
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return h, MLstmState(c, n, m_new)
+
+
+def mlstm_scan(p, x_up, nh, state: MLstmState):
+    """Sequential scan over T (baseline; chunkwise-parallel is a perf knob)."""
+    B, T, up = x_up.shape
+    q, k, v, log_i, log_f = _mlstm_qkvg(p, x_up, nh)
+
+    def body(st, xs):
+        qt, kt, vt, lit, lft = xs
+        h, st = mlstm_step(qt, kt, vt, lit, lft, st)
+        return st, h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, log_i, log_f))
+    state, hs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(B, T, up), state   # [B,T,up]
+
+
+def _group_norm(x, scale, nh, eps=1e-5):
+    """Headwise group norm over [..., up]."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], nh, shp[-1] // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (xh.reshape(shp) * scale).astype(x.dtype)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> MLstmState:
+    up = int(cfg.d_model * cfg.mlstm_proj_factor)
+    nh = cfg.num_heads
+    hd = up // nh
+    return MLstmState(jnp.zeros((batch, nh, hd, hd), jnp.float32),
+                      jnp.zeros((batch, nh, hd), jnp.float32),
+                      jnp.full((batch, nh), -1e30, jnp.float32))
+
+
+def apply_mlstm_block(p, x, cfg: ModelConfig, state: MLstmState | None = None,
+                      *, decode: bool = False):
+    """x: [B, T, d] -> (y [B, T, d], state)."""
+    B, T, d = x.shape
+    nh = cfg.num_heads
+    if state is None:
+        state = mlstm_state_init(cfg, B)
+    x_up = x @ p["w_up"]
+    gate = jax.nn.silu(x @ p["w_gate"])
+    if decode:
+        q, k, v, log_i, log_f = _mlstm_qkvg(p, x_up, nh)
+        h, state = mlstm_step(q[:, 0], k[:, 0], v[:, 0], log_i[:, 0],
+                              log_f[:, 0], state)
+        h = h.reshape(B, 1, -1)
+    else:
+        h, state = mlstm_scan(p, x_up, nh, state)
+    h = _group_norm(h.astype(x.dtype), p["gn_scale"], nh)
+    return (h * gate) @ p["w_down"], state
+
+
+# --------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------- #
+class SLstmState(NamedTuple):
+    c: jax.Array   # [B, w] f32 cell
+    n: jax.Array   # [B, w] f32 normalizer
+    h: jax.Array   # [B, w] f32 hidden (recurrent input)
+    m: jax.Array   # [B, w] f32 stabilizer
+
+
+def init_slstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    up = int(d * 4.0 / 3.0)
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, dtype),     # i, f, z, o from x
+        "w_h": dense_init(ks[1], d, 4 * d, dtype),     # recurrent
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "w_ff_i": dense_init(ks[2], d, 2 * up, dtype), # gated FFN (pf 4/3)
+        "w_ff_o": dense_init(ks[3], up, d, dtype),
+    }
+
+
+def slstm_step(p, xt, state: SLstmState, d):
+    g = (xt @ p["w_x"]).astype(jnp.float32) \
+        + (state.h.astype(xt.dtype) @ p["w_h"]).astype(jnp.float32) + p["b"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_i, log_f = gi, jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i = jnp.exp(log_i - m_new)
+    f = jnp.exp(log_f + state.m - m_new)
+    c = f * state.c + i * jnp.tanh(gz)
+    n = f * state.n + i
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return h, SLstmState(c, n, h, m_new)
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> SLstmState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLstmState(z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def apply_slstm_block(p, x, cfg: ModelConfig, state: SLstmState | None = None,
+                      *, decode: bool = False):
+    """x: [B, T, d] -> (y, state). Inherently sequential (h -> gates)."""
+    B, T, d = x.shape
+    if state is None:
+        state = slstm_state_init(cfg, B)
+    if decode:
+        h, state = slstm_step(p, x[:, 0], state, d)
+        hs = h[:, None]
+    else:
+        def body(st, xt):
+            h, st = slstm_step(p, xt, st, d)
+            return st, h
+        state, hs = jax.lax.scan(body, state, jnp.moveaxis(x, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)
+    y = _group_norm(hs.astype(x.dtype), p["gn_scale"], cfg.num_heads)
+    ff = y @ p["w_ff_i"]
+    a, b = jnp.split(ff, 2, axis=-1)
+    return (jax.nn.gelu(a) * b) @ p["w_ff_o"], state

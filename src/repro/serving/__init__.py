@@ -1,0 +1,14 @@
+from repro.serving.cluster import Cluster
+from repro.serving.engine import InstanceEngine
+from repro.serving.gmanager import GManager
+from repro.serving.kvpool import BlockAllocator, RankKVPool
+from repro.serving.perfmodel import InstancePerfModel, cluster_tps
+from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.rmanager import RManager
+from repro.serving.scheduler import GreedyScheduler, InstanceView
+
+__all__ = [
+    "Cluster", "InstanceEngine", "GManager", "BlockAllocator", "RankKVPool",
+    "InstancePerfModel", "cluster_tps", "Request", "RequestState",
+    "SamplingParams", "RManager", "GreedyScheduler", "InstanceView",
+]

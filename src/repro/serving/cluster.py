@@ -1,0 +1,278 @@
+"""Cluster runtime: N instances + gManager, KV movement, fault tolerance.
+
+In-process realization of the paper's Fig. 3/8 system: every instance is
+an ``InstanceEngine`` with an ``RManager``; a ``GManager`` ingests
+heartbeats, plans Algorithm-1 moves, and the runtime executes them with
+the try_move reservation protocol. Requests whose KV outgrows (or is
+proactively moved off) their owner instance decode via DistAttention —
+the creditor's MicroAttention is evaluated inside the owner's
+``decode_step_dist`` merge, and only query/merge-size traffic is charged.
+
+Fault tolerance: on heartbeat timeout the instance is dropped; every
+affected request is re-enqueued for re-prefill on survivors (KV is
+recomputable from tokens); hosted blocks are reclaimed.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.serving.engine import InstanceEngine
+from repro.serving.gmanager import GManager
+from repro.serving.perfmodel import InstancePerfModel
+from repro.serving.protocol import MoveKVCache, MoveResult
+from repro.serving.request import Request, RequestState
+
+
+class Cluster:
+    def __init__(self, params, cfg: ModelConfig, *, n_instances: int = 2,
+                 max_batch: int = 8, max_local_len: int = 128,
+                 pool_blocks: int = 64, block_size: int = 16,
+                 move_chunk_tokens: int = 16, schedule_every: int = 4,
+                 heartbeat_timeout: float = 3.0):
+        self.cfg = cfg
+        self.block_size = block_size
+        self.move_chunk = move_chunk_tokens
+        self.schedule_every = schedule_every
+        self.engines: Dict[int, InstanceEngine] = {
+            i: InstanceEngine(params, cfg, max_batch=max_batch,
+                              max_local_len=max_local_len,
+                              pool_blocks=pool_blocks,
+                              block_size=block_size, inst_id=i)
+            for i in range(n_instances)
+        }
+        for eng in self.engines.values():
+            eng.prefix_sink = self._make_prefix_sink(eng.inst_id)
+        perf = InstancePerfModel(cfg)
+        self.gmanager = GManager(perf, block_size,
+                                 heartbeat_timeout=heartbeat_timeout,
+                                 beta_thres=max_batch,
+                                 mem_util_thres=0.8)
+        self.requests: Dict[int, Request] = {}
+        self._step_count = 0
+        self._dead: set = set()
+        self._need_full_hb: set = set(self.engines)
+
+    # ----------------------------------------------------------------- #
+    def submit(self, req: Request) -> None:
+        self.requests[req.req_id] = req
+        inst = self.gmanager.pick_instance_for_new_request()
+        if inst is None or inst in self._dead:
+            # Bootstrap: no heartbeats yet -> least-loaded engine.
+            live = [e for i, e in self.engines.items()
+                    if i not in self._dead]
+            inst = min(live, key=lambda e: e.batch_size).inst_id
+        self.engines[inst].submit(req)
+
+    # --- movement ------------------------------------------------------ #
+    def _make_prefix_sink(self, src_id: int):
+        """Place a too-long prompt's prefix KV on creditors (prefill spill).
+
+        May split the span across several creditors; uses the same
+        try_move reservation as scheduled moves."""
+        def sink(req: Request, k, v):
+            n = k.shape[2]
+            placed = []
+            off = 0
+            while off < n:
+                dst = self._pick_creditor(exclude=src_id)
+                if dst is None:
+                    # Roll back partial placement.
+                    for d, kk, vv in placed:
+                        self.engines[d].drop_hosted(req.req_id)
+                    return None
+                eng = self.engines[dst]
+                free = eng.rmanager.pool.alloc.free_count
+                take_blocks = min(free, -(-(n - off) // self.block_size))
+                take = min(n - off, take_blocks * self.block_size)
+                if take <= 0:
+                    return None
+                nb = -(-take // self.block_size)
+                if not eng.rmanager.try_move_kvcache(req.req_id, nb):
+                    return None
+                eng.rmanager.commit_move_in(req.req_id, nb, at_front=False)
+                kk, vv = k[:, :, off:off + take], v[:, :, off:off + take]
+                eng.host_kv(req.req_id, kk, vv)
+                placed.append((dst, kk, vv))
+                off += take
+            return placed
+        return sink
+
+    def _execute_move(self, mv: MoveKVCache) -> MoveResult:
+        if mv.src_inst in self._dead or mv.dst_inst in self._dead:
+            return MoveResult.REJECTED
+        src = self.engines[mv.src_inst]
+        dst = self.engines[mv.dst_inst]
+        req = self.requests.get(mv.req_id)
+        if req is None or req.done or req.slot is None:
+            return MoveResult.GONE
+        # Clamp to what the ring can actually give up (keep >=1 block).
+        slot = req.slot
+        local_tokens = req.length - int(src.start[slot])
+        movable = max(0, local_tokens - self.block_size)
+        n_tokens = min(mv.num_blocks * self.block_size, movable)
+        n_blocks = n_tokens // self.block_size
+        if n_blocks <= 0:
+            return MoveResult.GONE
+        n_tokens = n_blocks * self.block_size
+        # Paper Fig. 8 step 4: FCFS reservation on the destination.
+        if not dst.rmanager.try_move_kvcache(mv.req_id, n_blocks):
+            return MoveResult.REJECTED
+        k, v = src.extract_prefix_kv(req, n_tokens)
+        dst.rmanager.commit_move_in(mv.req_id, n_blocks, at_front=False)
+        dst.host_kv(mv.req_id, k, v)
+        src.advance_start(req, n_tokens)
+        src.remote.setdefault(mv.req_id, []).append((mv.dst_inst, k, v))
+        nbytes = int(k.size + v.size) * k.dtype.itemsize
+        src.stats.kv_moved += nbytes
+        src.stats.tokens_moved_steps.append(n_tokens)
+        return MoveResult.OK
+
+    def _reactive_moves(self) -> None:
+        """Ship overflow before a ring write would evict live KV."""
+        for eng in self.engines.values():
+            if eng.inst_id in self._dead or not eng._can_pool:
+                continue
+            for req in eng.running:
+                if eng.ring_free_tokens(req) <= 1:
+                    dst = self._pick_creditor(exclude=eng.inst_id)
+                    n_blocks = max(1, self.move_chunk // self.block_size)
+                    ok = (dst is not None and
+                          self._execute_move(MoveKVCache(
+                              req.req_id, n_blocks, eng.inst_id, dst))
+                          == MoveResult.OK)
+                    if not ok and eng.ring_free_tokens(req) <= 0:
+                        # Next write would evict live KV: the cluster is
+                        # out of pooled memory -> fail loudly, never
+                        # corrupt (paper: reject when pool exhausted).
+                        req.state = RequestState.FAILED
+                        eng.slots[req.slot] = None
+                        eng.start[req.slot] = 0
+                        req.slot = None
+                        eng.rmanager.release_request(req.req_id)
+
+    def _pick_creditor(self, exclude: int) -> Optional[int]:
+        best, best_free = None, 0
+        for i, e in self.engines.items():
+            if i == exclude or i in self._dead:
+                continue
+            free = e.rmanager.pool.alloc.free_count
+            if free > best_free:
+                best, best_free = i, free
+        return best
+
+    # --- fault tolerance ------------------------------------------------#
+    def kill_instance(self, inst_id: int) -> None:
+        """Simulate an instance failure (stops heartbeating)."""
+        self._dead.add(inst_id)
+
+    def _handle_dead(self, dead: List[int]) -> None:
+        for d in dead:
+            self._dead.add(d)
+            eng = self.engines[d]
+            # 1) Requests OWNED by the dead instance: re-prefill elsewhere
+            #    (KV is recomputable from prompt + generated tokens).
+            for req in list(eng.running) + list(eng.waiting):
+                if req.done:
+                    continue
+                req.state = RequestState.WAITING
+                req.slot = None
+                req.prompt = req.prompt + req.output   # keep progress
+                req.output = []
+                # Reclaim creditor-hosted spans; they will be recomputed.
+                for i, e in self.engines.items():
+                    if i not in self._dead:
+                        e.drop_hosted(req.req_id)
+                self.submit(req)
+            # 2) Requests with REMOTE spans hosted on the dead instance:
+            #    the lost span must be recomputed -> full re-prefill.
+            for i, e in self.engines.items():
+                if i in self._dead:
+                    continue
+                for req in list(e.running):
+                    spans = e.remote.get(req.req_id)
+                    if spans and any(inst == d for inst, _, _ in spans):
+                        req.state = RequestState.WAITING
+                        req.prompt = req.prompt + req.output
+                        req.output = []
+                        e.slots[req.slot] = None
+                        e.start[req.slot] = 0
+                        req.slot = None
+                        e.rmanager.release_request(req.req_id)
+                        e.remote.pop(req.req_id, None)
+                        self.submit(req)
+            self.gmanager.deregister(d)
+
+    def add_instance(self, params) -> int:
+        """Elastic scale-out: new instance joins as a fresh creditor."""
+        new_id = max(self.engines) + 1
+        ref = next(iter(self.engines.values()))
+        self.engines[new_id] = InstanceEngine(
+            params, self.cfg, max_batch=ref.max_batch,
+            max_local_len=ref.max_local_len,
+            pool_blocks=ref.rmanager.pool.alloc.num_blocks,
+            block_size=self.block_size, inst_id=new_id)
+        self.engines[new_id].prefix_sink = self._make_prefix_sink(new_id)
+        self._need_full_hb.add(new_id)
+        return new_id
+
+    # ----------------------------------------------------------------- #
+    def step(self, now: Optional[float] = None) -> int:
+        """One cluster iteration: heartbeats, plan, moves, decode."""
+        now = time.monotonic() if now is None else now
+        self._step_count += 1
+
+        # Heartbeats (dead instances stay silent).
+        for i, eng in self.engines.items():
+            if i in self._dead:
+                continue
+            full = i in self._need_full_hb or self.gmanager.bootstrapping
+            ok = self.gmanager.on_heartbeat(eng.rmanager.heartbeat(full),
+                                            now=now)
+            if not ok:
+                self.gmanager.on_heartbeat(
+                    eng.rmanager.heartbeat(full=True), now=now)
+            self._need_full_hb.discard(i)
+        self.gmanager.bootstrapping = False
+
+        dead = self.gmanager.check_liveness(now=now)
+        if dead:
+            self._handle_dead(dead)
+
+        # Reactive overflow shipping, then periodic Algorithm-1 planning.
+        self._reactive_moves()
+        if self._step_count % self.schedule_every == 0:
+            for mv in self.gmanager.plan_moves():
+                self._execute_move(mv)
+
+        made = 0
+        for i, eng in self.engines.items():
+            if i in self._dead:
+                continue
+            made += eng.step()
+        # Free creditor-hosted KV of finished requests.
+        for rid, req in self.requests.items():
+            if req.done:
+                for eng in self.engines.values():
+                    if rid in eng.hosted:
+                        eng.drop_hosted(rid)
+        return made
+
+    # ----------------------------------------------------------------- #
+    def run_until_done(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while steps < max_steps and any(not r.done
+                                        for r in self.requests.values()):
+            self.step()
+            steps += 1
+        return steps
+
+    @property
+    def throughput_stats(self) -> Dict[str, float]:
+        total_kv = sum(e.stats.kv_moved for e in self.engines.values())
+        total_q = sum(e.stats.query_shipped for e in self.engines.values())
+        return {"kv_moved_bytes": total_kv, "query_shipped_bytes": total_q}

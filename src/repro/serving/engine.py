@@ -1,0 +1,285 @@
+"""Single-instance serving engine: continuous batching over fixed slots.
+
+ORCA-style iteration-level scheduling: each ``step()`` admits waiting
+requests into free slots (prefill), then runs ONE decode iteration for
+all running slots. The local KV lives in a ring cache of ``max_local_len``
+tokens per slot; when a request outgrows it (or the scheduler says so)
+the overflow prefix is shipped to creditor instances and decoding
+continues with ``decode_step_dist`` — the DistAttention path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import DecodeState, decode_step, init_decode_state
+from repro.models.prefill import decode_step_dist, prefill, write_slot
+from repro.serving.request import Request, RequestState
+from repro.serving.rmanager import RManager
+
+
+def repack_ring(state: DecodeState, new_maxlen: int,
+                n_keep: Optional[int] = None) -> DecodeState:
+    """Convert a full prefill cache (max_len = T, identity layout) into a
+    ring cache of ``new_maxlen`` holding the tail ``n_keep`` tokens."""
+    T = int(state.lens[0])
+    n = min(T, new_maxlen if n_keep is None else n_keep)
+    k = state.kv_k[:, :, T - n:T]
+    v = state.kv_v[:, :, T - n:T]
+    slots = (T - n + np.arange(n)) % new_maxlen
+    L, B = state.kv_k.shape[:2]
+    shape = (L, B, new_maxlen) + state.kv_k.shape[3:]
+    nk = jnp.zeros(shape, state.kv_k.dtype).at[:, :, slots].set(k)
+    nv = jnp.zeros(shape, state.kv_v.dtype).at[:, :, slots].set(v)
+    return DecodeState(nk, nv, state.lens, state.rec)
+
+
+@dataclass
+class CommStats:
+    """Bytes moved, per category — feeds the Fig. 4/11/12 benchmarks."""
+    kv_moved: int = 0            # KV block migration (overlapped)
+    query_shipped: int = 0       # q + (o, m, l) merge traffic per step
+    tokens_moved_steps: List[int] = field(default_factory=list)
+
+
+class InstanceEngine:
+    """One serving instance (model replica)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
+                 max_local_len: int = 256, pool_blocks: int = 1024,
+                 block_size: int = 16, inst_id: int = 0,
+                 capacity_factor: float = -1.0):
+        self.params = params
+        self.cfg = cfg
+        self.inst_id = inst_id
+        self.max_batch = max_batch
+        self.max_local_len = max_local_len
+        self.block_size = block_size
+        self.rmanager = RManager(inst_id, pool_blocks, block_size)
+        self.state = init_decode_state(cfg, max_batch, max_local_len)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.start = np.zeros(max_batch, np.int64)   # first local abs pos
+        self.waiting: List[Request] = []
+        self.hosted: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+        self.stats = CommStats()
+        self._key = jax.random.PRNGKey(1234 + inst_id)
+        self._can_pool = cfg.family in ("dense", "moe")
+        # Remote spans per req_id: owner-side view (k, v arrays per
+        # creditor, concatenated lazily at step time).
+        self.remote: Dict[int, List[Tuple[int, jnp.ndarray, jnp.ndarray]]] \
+            = {}
+        # Cluster-installed callback: place an overflowing prefill prefix
+        # on creditors. sink(req, k, v) -> list[(dst_inst, k, v)] | None.
+        self.prefix_sink: Optional[Callable] = None
+
+    # ----------------------------------------------------------------- #
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.running)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    # ----------------------------------------------------------------- #
+    def _admit_one(self) -> bool:
+        if not self.waiting:
+            return False
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        req = self.waiting[0]
+        T = len(req.prompt)
+        # Admit with one block of ring headroom so the first decode writes
+        # never evict live KV before a reactive move can run.
+        cap = self.max_local_len - self.block_size
+        n_local = min(T, cap)
+        need_blocks = -(-n_local // self.block_size)
+        if self.rmanager.pool.alloc.free_count < need_blocks:
+            return False
+        if T > cap and (not self._can_pool or self.prefix_sink is None):
+            req.state = RequestState.FAILED      # cannot span: no KV pool
+            self.waiting.pop(0)
+            return True
+        self.waiting.pop(0)
+
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        logits, full_state = prefill(self.params, self.cfg, tokens,
+                                     max_len=T)
+        if T > cap:
+            # Ship the overflow prefix to creditors before decoding starts
+            # (the paper's prefill-time spill).
+            n_over = T - n_local
+            spans = self.prefix_sink(req,
+                                     full_state.kv_k[:, :, :n_over],
+                                     full_state.kv_v[:, :, :n_over])
+            if spans is None:                    # cluster-wide OOM
+                req.state = RequestState.FAILED
+                return True
+            self.remote[req.req_id] = list(spans)
+            nbytes = sum(int(k.size + v.size) * k.dtype.itemsize
+                         for _, k, v in spans)
+            self.stats.kv_moved += nbytes
+            self.start[slot] = n_over
+        else:
+            self.start[slot] = 0
+        req_state = repack_ring(full_state, self.max_local_len,
+                                n_keep=n_local)
+        self.state = write_slot(self.state, slot, req_state, self.cfg)
+        self.rmanager.pool.append_tokens(req.req_id, n_local)
+        self.rmanager.set_owner(req.req_id, True)
+        req.slot = slot
+        req.state = RequestState.RUNNING
+        self.slots[slot] = req
+        # First generated token comes from the prefill logits.
+        self._emit(req, logits[0])
+        return True
+
+    def _emit(self, req: Request, logits: jnp.ndarray) -> None:
+        if req.sampling.temperature <= 0.0:
+            tok = int(jnp.argmax(logits))
+        else:
+            self._key, sub = jax.random.split(self._key)
+            tok = int(jax.random.categorical(
+                sub, logits.astype(jnp.float32) / req.sampling.temperature))
+        req.output.append(tok)
+        eos = req.sampling.eos_token
+        if (len(req.output) >= req.sampling.max_new_tokens
+                or (eos is not None and tok == eos)):
+            self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = time.monotonic()
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            self.start[req.slot] = 0
+            req.slot = None
+        self.rmanager.release_request(req.req_id)
+        self.remote.pop(req.req_id, None)
+
+    # ----------------------------------------------------------------- #
+    def _gather_remote(self, reqs: List[Optional[Request]]):
+        """Build padded [L, B, S_r, K, hd] remote arrays for this step."""
+        cfg = self.cfg
+        L = self.state.kv_k.shape[0]
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        spans = []
+        for r in reqs:
+            if r is None or r.req_id not in self.remote:
+                spans.append(None)
+                continue
+            ks = [k for (_, k, _) in self.remote[r.req_id]]
+            vs = [v for (_, _, v) in self.remote[r.req_id]]
+            spans.append((jnp.concatenate(ks, 2), jnp.concatenate(vs, 2)))
+        S_r = max([s[0].shape[2] for s in spans if s is not None],
+                  default=0)
+        S_r = max(S_r, 1)
+        B = len(reqs)
+        rk = jnp.zeros((L, B, S_r, K, hd), jnp.dtype(cfg.dtype))
+        rv = jnp.zeros((L, B, S_r, K, hd), jnp.dtype(cfg.dtype))
+        rlen = np.zeros(B, np.int32)
+        for b, s in enumerate(spans):
+            if s is None:
+                continue
+            n = s[0].shape[2]
+            rk = rk.at[:, b, :n].set(s[0][:, 0])
+            rv = rv.at[:, b, :n].set(s[1][:, 0])
+            rlen[b] = n
+        return rk, rv, jnp.asarray(rlen)
+
+    def step(self) -> int:
+        """Admit + one decode iteration. Returns #tokens generated."""
+        while self._admit_one():
+            pass
+        running = [r for r in self.slots if r is not None]
+        if not running:
+            self.rmanager.batch_size = 0
+            return 0
+
+        tokens = np.zeros(self.max_batch, np.int32)
+        active = np.zeros(self.max_batch, bool)
+        for i, r in enumerate(self.slots):
+            if r is not None:
+                tokens[i] = r.output[-1] if r.output else r.prompt[-1]
+                active[i] = True
+        tokens = jnp.asarray(tokens)
+
+        any_remote = any(r is not None and r.req_id in self.remote
+                         for r in self.slots)
+        if any_remote:
+            rk, rv, rlen = self._gather_remote(self.slots)
+            start = jnp.asarray(self.start, jnp.int32)
+            logits, self.state = decode_step_dist(
+                self.params, self.cfg, self.state, tokens, start, rk, rv,
+                rlen)
+            # Account the paper's per-step merge traffic: q + (o, m, l).
+            H, hd = self.cfg.num_heads, self.cfg.head_dim
+            L = self.cfg.num_layers
+            n_span = sum(1 for r in self.slots
+                         if r is not None and r.req_id in self.remote)
+            self.stats.query_shipped += int(
+                n_span * L * (H * hd * 2 + H * hd * 4 + 2 * H * 4))
+        else:
+            logits, self.state = decode_step(self.params, self.cfg,
+                                             self.state, tokens)
+
+        made = 0
+        for i, r in enumerate(list(self.slots)):
+            if r is None:
+                continue
+            self.rmanager.pool.append_tokens(r.req_id, 1)
+            self._emit(r, logits[i])
+            made += 1
+        self.rmanager.batch_size = self.batch_size
+        return made
+
+    # --- KV movement (debtor side) ------------------------------------ #
+    def extract_prefix_kv(self, req: Request, n_tokens: int):
+        """Slice [start, start+n) KV out of the ring (before eviction)."""
+        slot = req.slot
+        s0 = int(self.start[slot])
+        maxlen = self.max_local_len
+        pos = s0 + np.arange(n_tokens)
+        ring = pos % maxlen
+        k = self.state.kv_k[:, slot:slot + 1, ring]
+        v = self.state.kv_v[:, slot:slot + 1, ring]
+        return k, v
+
+    def ring_free_tokens(self, req: Request) -> int:
+        slot = req.slot
+        used = req.length - int(self.start[slot])
+        return self.max_local_len - used
+
+    def advance_start(self, req: Request, n_tokens: int) -> None:
+        self.start[req.slot] += n_tokens
+        n_blocks = n_tokens // self.block_size
+        if n_blocks:
+            self.rmanager.move_out_prefix(req.req_id, n_blocks)
+
+    # --- creditor side -------------------------------------------------#
+    def host_kv(self, req_id: int, k, v) -> None:
+        if req_id in self.hosted:
+            k0, v0 = self.hosted[req_id]
+            k, v = jnp.concatenate([k0, k], 2), jnp.concatenate([v0, v], 2)
+        self.hosted[req_id] = (k, v)
+
+    def drop_hosted(self, req_id: int) -> None:
+        self.hosted.pop(req_id, None)
+        self.rmanager.release_request(req_id)

@@ -1,0 +1,131 @@
+"""gManager: centralized global planner (paper §6.1-6.2).
+
+Maintains the request placement map from periodic rManager heartbeats
+(delta-encoded; full on gManager failover), detects dead instances via
+heartbeat timeouts, runs Algorithm 1 periodically, and emits MoveKVCache
+instructions. The map is deliberately allowed to go stale — safety comes
+from the try_move reservation on the destination (paper Fig. 8 step 4-5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.perfmodel import InstancePerfModel
+from repro.serving.protocol import (Heartbeat, MoveKVCache,
+                                    RequestPlacementEntry)
+from repro.serving.scheduler import GreedyScheduler, InstanceView
+
+
+@dataclass
+class _InstanceStatus:
+    inst_id: int
+    last_seq: int = 0
+    last_beat: float = 0.0
+    batch_size: int = 0
+    mem_blocks_total: int = 0
+    mem_blocks_used: int = 0
+    alive: bool = True
+    # req_id -> entry (this instance's slice of the request)
+    entries: Dict[int, RequestPlacementEntry] = field(default_factory=dict)
+
+
+class GManager:
+    def __init__(self, perf: InstancePerfModel, block_size: int,
+                 heartbeat_timeout: float = 3.0,
+                 beta_thres: int = 64, mem_util_thres: float = 0.8):
+        self.scheduler = GreedyScheduler(perf, block_size,
+                                         beta_thres=beta_thres,
+                                         mem_util_thres=mem_util_thres)
+        self.block_size = block_size
+        self.timeout = heartbeat_timeout
+        self.instances: Dict[int, _InstanceStatus] = {}
+        self.bootstrapping = True     # new gManager needs full heartbeats
+
+    # --- heartbeat ingestion ------------------------------------------ #
+    def on_heartbeat(self, hb: Heartbeat, now: Optional[float] = None
+                     ) -> bool:
+        """Returns False if a FULL heartbeat is required (failover resync
+        or out-of-order delta)."""
+        now = time.monotonic() if now is None else now
+        st = self.instances.get(hb.inst_id)
+        if st is None:
+            st = _InstanceStatus(hb.inst_id)
+            self.instances[hb.inst_id] = st
+            if not hb.full:
+                return False                      # need full state first
+        if not hb.full and hb.seq != st.last_seq + 1:
+            return False                          # lost a delta -> resync
+        if hb.full:
+            st.entries = {}
+        for e in hb.entries:
+            st.entries[e.req_id] = e
+        for rid in hb.removed_req_ids:
+            st.entries.pop(rid, None)
+        st.last_seq = hb.seq
+        st.last_beat = now
+        st.batch_size = hb.batch_size
+        st.mem_blocks_total = hb.mem_blocks_total
+        st.mem_blocks_used = hb.mem_blocks_used
+        st.alive = True
+        return True
+
+    # --- failure detection / elasticity -------------------------------- #
+    def check_liveness(self, now: Optional[float] = None) -> List[int]:
+        """Mark instances dead on heartbeat timeout; return newly dead."""
+        now = time.monotonic() if now is None else now
+        dead = []
+        for st in self.instances.values():
+            if st.alive and now - st.last_beat > self.timeout:
+                st.alive = False
+                dead.append(st.inst_id)
+        return dead
+
+    def deregister(self, inst_id: int) -> None:
+        self.instances.pop(inst_id, None)
+
+    def requests_touching(self, inst_id: int) -> List[int]:
+        st = self.instances.get(inst_id)
+        return sorted(st.entries) if st else []
+
+    def owner_of(self, req_id: int) -> Optional[int]:
+        for st in self.instances.values():
+            e = st.entries.get(req_id)
+            if e is not None and e.local:
+                return st.inst_id
+        return None
+
+    # --- planning ------------------------------------------------------ #
+    def _views(self) -> List[InstanceView]:
+        views = []
+        for st in self.instances.values():
+            reqs = {}
+            for rid, e in st.entries.items():
+                # total length is only known to the owner; approximate by
+                # this instance's share (the scheduler only needs owned
+                # lengths, where local=True gives the true tail holder).
+                reqs[rid] = (e.num_blocks * self.block_size,
+                             e.num_blocks, e.local)
+            hosted = sum(e.num_blocks for e in st.entries.values()
+                         if not e.local) * self.block_size
+            views.append(InstanceView(
+                inst_id=st.inst_id, batch_size=st.batch_size,
+                mem_blocks_total=st.mem_blocks_total,
+                mem_blocks_used=st.mem_blocks_used,
+                requests=reqs, hosted_tokens=hosted, alive=st.alive))
+        return views
+
+    def plan_moves(self) -> List[MoveKVCache]:
+        moves = self.scheduler.plan(self._views())
+        return [MoveKVCache(m.req_id, m.num_blocks, m.src, m.dst)
+                for m in moves]
+
+    # --- placement queries for new requests ----------------------------- #
+    def pick_instance_for_new_request(self) -> Optional[int]:
+        """Paper policy: dispatch to the instance with most free memory."""
+        alive = [s for s in self.instances.values() if s.alive]
+        if not alive:
+            return None
+        return max(alive, key=lambda s: s.mem_blocks_total -
+                   s.mem_blocks_used).inst_id

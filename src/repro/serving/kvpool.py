@@ -1,0 +1,176 @@
+"""Paged KVCache block pool — host-side allocator + device-table builder.
+
+Each serving rank (an entry on the ``data`` — and optionally ``model`` —
+mesh axis) owns a fixed pool of ``num_blocks`` blocks of ``block_size``
+tokens. The allocator hands out block ids; per-request *local tables*
+(sequence-ordered local block ids, -1 padded) are what the paged
+MicroAttention kernel consumes. Placement across ranks is pure metadata:
+moving a block = copying pool rows + editing tables, never recompilation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class BlockAllocator:
+    """Fixed-capacity block allocator for one rank's pool."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._owner: Dict[int, int] = {}          # block -> req_id
+        self.reserved = 0                         # try_move reservations
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free) - self.reserved
+
+    @property
+    def used_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self, n: int, req_id: int) -> Optional[List[int]]:
+        if n > self.free_count:
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._owner[b] = req_id
+        return blocks
+
+    def reserve(self, n: int) -> bool:
+        """Reserve capacity ahead of a KV move (try_move_kvcache)."""
+        if n > self.free_count:
+            return False
+        self.reserved += n
+        return True
+
+    def commit_reservation(self, n: int, req_id: int) -> List[int]:
+        assert self.reserved >= n
+        self.reserved -= n
+        blocks = self.alloc(n, req_id)
+        assert blocks is not None
+        return blocks
+
+    def cancel_reservation(self, n: int) -> None:
+        self.reserved = max(0, self.reserved - n)
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            owner = self._owner.pop(b, None)
+            if owner is None:
+                raise KeyError(f"double free of block {b}")
+            self._free.append(b)
+
+    def blocks_of(self, req_id: int) -> List[int]:
+        return [b for b, r in self._owner.items() if r == req_id]
+
+
+@dataclass
+class RequestBlocks:
+    """Sequence-ordered block list of one request on one rank."""
+    req_id: int
+    blocks: List[int] = field(default_factory=list)
+    tail_tokens: int = 0       # valid tokens in the LAST block (1..bs)
+
+    def n_tokens(self, block_size: int) -> int:
+        if not self.blocks:
+            return 0
+        return (len(self.blocks) - 1) * block_size + self.tail_tokens
+
+
+class RankKVPool:
+    """One rank's pool: allocator + per-request ordered block lists."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.alloc = BlockAllocator(num_blocks, block_size)
+        self.block_size = block_size
+        self.requests: Dict[int, RequestBlocks] = {}
+
+    # ----------------------------------------------------------------- #
+    def append_tokens(self, req_id: int, n: int) -> bool:
+        """Extend a request by n tokens, allocating blocks as needed."""
+        bs = self.block_size
+        rb = self.requests.setdefault(req_id, RequestBlocks(req_id))
+        while n > 0:
+            if rb.blocks and rb.tail_tokens < bs:
+                take = min(n, bs - rb.tail_tokens)
+                rb.tail_tokens += take
+                n -= take
+                continue
+            blocks = self.alloc.alloc(1, req_id)
+            if blocks is None:
+                return False
+            rb.blocks.extend(blocks)
+            rb.tail_tokens = 0
+        return True
+
+    def pop_prefix_blocks(self, req_id: int, n_blocks: int) -> List[int]:
+        """Remove the OLDEST n full blocks (for migration to a creditor)."""
+        rb = self.requests[req_id]
+        n_full = len(rb.blocks) - (1 if rb.tail_tokens < self.block_size
+                                   else 0)
+        n_blocks = min(n_blocks, max(0, n_full))
+        popped, rb.blocks = rb.blocks[:n_blocks], rb.blocks[n_blocks:]
+        self.alloc.free(popped)
+        if not rb.blocks:
+            rb.tail_tokens = 0
+        return popped
+
+    def adopt_blocks(self, req_id: int, n_blocks: int,
+                     at_front: bool = False) -> Optional[List[int]]:
+        """Allocate blocks for KV arriving from another rank (full blocks)."""
+        blocks = self.alloc.alloc(n_blocks, req_id)
+        if blocks is None:
+            return None
+        rb = self.requests.setdefault(req_id, RequestBlocks(req_id))
+        if at_front:
+            rb.blocks = blocks + rb.blocks
+            if rb.tail_tokens == 0:
+                rb.tail_tokens = self.block_size
+        else:
+            if rb.blocks and rb.tail_tokens < self.block_size:
+                raise ValueError("cannot append full blocks after a "
+                                 "partial tail")
+            rb.blocks.extend(blocks)
+            rb.tail_tokens = self.block_size
+        return blocks
+
+    def release(self, req_id: int) -> None:
+        rb = self.requests.pop(req_id, None)
+        if rb and rb.blocks:
+            self.alloc.free(rb.blocks)
+
+    def tokens_of(self, req_id: int) -> int:
+        rb = self.requests.get(req_id)
+        return rb.n_tokens(self.block_size) if rb else 0
+
+    @property
+    def memory_utilization(self) -> float:
+        return self.alloc.used_count / self.alloc.num_blocks
+
+
+def build_local_tables(pools: Sequence[RankKVPool], req_ids: Sequence[int],
+                       max_blocks: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Device inputs for the paged kernel across ranks.
+
+    Returns (tables [n_ranks, R, max_blocks] int32 -1-padded,
+             tail_len [n_ranks, R] int32).
+    """
+    n_ranks, R = len(pools), len(req_ids)
+    tables = -np.ones((n_ranks, R, max_blocks), np.int32)
+    tails = np.full((n_ranks, R), 0, np.int32)
+    for p, pool in enumerate(pools):
+        for r, rid in enumerate(req_ids):
+            rb = pool.requests.get(rid)
+            if not rb or not rb.blocks:
+                tails[p, r] = pool.block_size
+                continue
+            n = min(len(rb.blocks), max_blocks)
+            tables[p, r, :n] = rb.blocks[:n]
+            tails[p, r] = (rb.tail_tokens if n == len(rb.blocks)
+                           else pool.block_size)
+    return tables, tails

@@ -1,0 +1,142 @@
+"""The paper's performance model (Eq. 5-7), calibrated for TPU v5e.
+
+  T_layer(beta, S) = T_natn(beta) + T_atn(S)
+                   = W(beta) / f(beta) + sum_r S_r / g(S)        (Eq. 5)
+
+* W(beta): non-attention FLOPs per layer for a decode step of batch beta —
+  2 FLOPs per active parameter per token.
+* f(beta): achieved FLOP/s. Non-attention GEMMs at decode are bandwidth
+  bound until the batch reaches the critical arithmetic intensity
+  (~240 on v5e): f(beta) = peak * min(1, beta / I_crit). This reproduces
+  the paper's Fig. 2(c) saturation shape.
+* g(S): attention "performance". Decode attention is strictly bandwidth
+  bound (each KV byte read once, intensity ~1 FLOP/byte), so we express
+  T_atn directly as KV bytes / HBM bandwidth; g(S) is constant in S —
+  matching the paper's observation that attention does not batch.
+
+Debtor/creditor adjustments (Eq. 6) subtract/add the offloaded KV-bytes
+time; cluster throughput is the sum of instance TPS (Eq. 7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.distributed.hardware import V5E, HardwareSpec
+
+
+@dataclass
+class InstancePerfModel:
+    cfg: ModelConfig
+    hw: HardwareSpec = V5E
+    chips: int = 1                 # chips per instance (TP degree)
+    bytes_per_el: int = 2
+
+    # ------------------------------------------------------------------ #
+    def _active_params_per_layer(self) -> float:
+        c = self.cfg
+        body = c.active_param_count() - c.vocab_size * c.d_model * \
+            (1 if c.tie_embeddings else 2)
+        return body / max(1, c.num_layers)
+
+    def w_natn(self, beta: int) -> float:
+        """Non-attention FLOPs for one decode step of one layer (Eq. 5 W)."""
+        return 2.0 * beta * self._active_params_per_layer()
+
+    def f_natn(self, beta: int) -> float:
+        """Achieved non-attention FLOP/s at batch beta (saturating ramp)."""
+        peak = self.hw.peak_flops_bf16 * self.chips
+        return peak * min(1.0, beta / self.hw.critical_intensity)
+
+    def t_natn(self, beta: int) -> float:
+        if beta <= 0:
+            return 0.0
+        return self.w_natn(beta) / self.f_natn(beta)
+
+    def kv_bytes_per_token_layer(self) -> float:
+        c = self.cfg
+        return 2.0 * c.num_kv_heads * c.head_dim * self.bytes_per_el
+
+    def t_atn(self, lengths: Sequence[int]) -> float:
+        """Attention time of one layer: sum_r S_r / g (bandwidth bound)."""
+        kv_bytes = sum(lengths) * self.kv_bytes_per_token_layer()
+        return kv_bytes / (self.hw.hbm_bw * self.chips)
+
+    # Per-hop collective latency on the ICI ring (~1 us on v5e).
+    alpha_hop: float = 1e-6
+
+    def t_tp_comm(self, beta: int) -> float:
+        """Per-layer TP collective time: two all-reduces (attention out +
+        FFN out) of [beta, d_model] activations over the ring, bandwidth
+        PLUS per-hop latency 2(c-1)*alpha each — the latency term is what
+        makes wide TP inefficient at decode (paper Fig. 1(c) / Obs. 1:
+        over-segmentation of the non-attention layers)."""
+        if self.chips <= 1:
+            return 0.0
+        bytes_ar = 2 * 2 * beta * self.cfg.d_model * self.bytes_per_el \
+            * (self.chips - 1) / self.chips
+        latency = 2 * 2 * (self.chips - 1) * self.alpha_hop
+        return bytes_ar / self.hw.ici_link_bw + latency
+
+    def t_layer(self, beta: int, lengths: Sequence[int]) -> float:
+        return self.t_natn(beta) + self.t_atn(lengths) \
+            + self.t_tp_comm(beta)
+
+    # --- Eq. 6: debtor / creditor corrections ------------------------- #
+    def t_layer_debtor(self, beta: int, lengths: Sequence[int],
+                       offloaded_tokens: int) -> float:
+        """Debtor: ``offloaded_tokens`` of its KV live on creditors."""
+        off_bytes = offloaded_tokens * self.kv_bytes_per_token_layer()
+        return self.t_layer(beta, lengths) - off_bytes / \
+            (self.hw.hbm_bw * self.chips)
+
+    def t_layer_creditor(self, beta: int, lengths: Sequence[int],
+                         hosted_tokens: int) -> float:
+        """Creditor: computes MicroAttention for ``hosted_tokens`` of
+        others' KV."""
+        host_bytes = hosted_tokens * self.kv_bytes_per_token_layer()
+        return self.t_layer(beta, lengths) + host_bytes / \
+            (self.hw.hbm_bw * self.chips)
+
+    # --- Eq. 7: instance / cluster throughput ------------------------- #
+    def tps(self, beta: int, lengths: Sequence[int],
+            offloaded_tokens: int = 0, hosted_tokens: int = 0) -> float:
+        """Decode tokens/second of the instance.
+
+        Beyond the paper's Eq. 6 we enforce its §5.2.1 coverage
+        constraint: the debtor cannot finish a step before the remote
+        MicroAttention it depends on — its effective layer time is
+        max(local time after offload, remote MA time). Without this the
+        model claims unbounded gain from offloading everything.
+        """
+        if beta <= 0 and hosted_tokens <= 0:
+            return 0.0
+        if beta <= 0:
+            return 0.0
+        off_t = offloaded_tokens * self.kv_bytes_per_token_layer() / \
+            (self.hw.hbm_bw * self.chips)
+        t_local = self.t_layer(beta, lengths) - off_t
+        t = max(t_local, off_t)                    # Fig. 6(a) coverage
+        t += hosted_tokens * self.kv_bytes_per_token_layer() / \
+            (self.hw.hbm_bw * self.chips)
+        t = max(t, 1e-12)
+        return beta / (self.cfg.num_layers * t)
+
+    # --- memory ------------------------------------------------------- #
+    def kv_tokens_capacity(self, reserve_frac: float = 0.1) -> int:
+        """How many KV tokens fit on this instance beside the weights."""
+        c = self.cfg
+        weight_bytes = c.param_count() * self.bytes_per_el
+        total = self.hw.hbm_bytes * self.chips * (1 - reserve_frac)
+        avail = max(0.0, total - weight_bytes)
+        per_tok = c.kv_bytes_per_token(self.bytes_per_el)
+        return int(avail / per_tok) if per_tok else 1 << 60
+
+
+def cluster_tps(models: List[InstancePerfModel], betas: List[int],
+                lengths: List[List[int]], offloaded: List[int],
+                hosted: List[int]) -> float:
+    """Eq. 7: aggregated cluster throughput."""
+    return sum(m.tps(b, ls, off, host) for m, b, ls, off, host
+               in zip(models, betas, lengths, offloaded, hosted))

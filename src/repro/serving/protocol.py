@@ -1,0 +1,48 @@
+"""The paper's §6 protocol objects (Listing 1) + message structs.
+
+heartbeat:            rManager -> gManager, delta-encoded placement entries
+move_kvcache:         gManager -> rManager (src), a planned movement
+try_move_kvcache:     src rManager -> dst rManager, FCFS space reservation
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass(frozen=True)
+class RequestPlacementEntry:
+    """One request's KVCache footprint on one instance (paper Listing 1)."""
+    req_id: int
+    inst_id: int
+    num_blocks: int
+    local: bool            # True if this instance is the request's debtor
+                           # (owner) instance
+
+
+@dataclass
+class Heartbeat:
+    inst_id: int
+    seq: int                                   # monotone per instance
+    full: bool                                 # full resync vs delta
+    entries: List[RequestPlacementEntry]
+    batch_size: int = 0
+    mem_blocks_total: int = 0
+    mem_blocks_used: int = 0
+    removed_req_ids: List[int] = field(default_factory=list)
+
+
+@dataclass
+class MoveKVCache:
+    """gManager instruction: move num_blocks of req_id src -> dst."""
+    req_id: int
+    num_blocks: int
+    src_inst: int
+    dst_inst: int
+
+
+class MoveResult(enum.Enum):
+    OK = "ok"
+    REJECTED = "rejected"          # dst out of space (stale global view)
+    GONE = "gone"                  # request finished/failed meanwhile

@@ -1,0 +1,48 @@
+"""Request lifecycle objects for the serving engine and cluster runtime."""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+_req_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclass
+class SamplingParams:
+    max_new_tokens: int = 64
+    temperature: float = 0.0          # 0 => greedy
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    state: RequestState = RequestState.WAITING
+    output: List[int] = field(default_factory=list)
+    arrival_time: float = 0.0
+    finish_time: Optional[float] = None
+    slot: Optional[int] = None        # engine batch slot while RUNNING
+    # Cluster placement: ordered spans (instance_id, n_tokens) covering
+    # [0, len); the LAST span is always on the owner (debtor) instance.
+    spans: List[Tuple[int, int]] = field(default_factory=list)
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.output)
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.FINISHED, RequestState.FAILED)

@@ -1,0 +1,85 @@
+"""rManager: per-instance local manager (paper §6.1).
+
+Owns the instance's block pool, answers try_move_kvcache reservations
+FCFS, emits delta heartbeats, and executes movement instructions. The
+actual KV bytes live with the instance engine; the rManager only manages
+metadata + reservations so a stale gManager plan can never corrupt state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set
+
+from repro.serving.kvpool import RankKVPool
+from repro.serving.protocol import (Heartbeat, MoveResult,
+                                    RequestPlacementEntry)
+
+
+class RManager:
+    def __init__(self, inst_id: int, num_blocks: int, block_size: int):
+        self.inst_id = inst_id
+        self.pool = RankKVPool(num_blocks, block_size)
+        self.block_size = block_size
+        self._seq = 0
+        self._last_reported: Dict[int, RequestPlacementEntry] = {}
+        self._owned: Set[int] = set()       # req_ids this instance owns
+        self.batch_size = 0
+
+    # --- placement metadata ------------------------------------------- #
+    def set_owner(self, req_id: int, owned: bool = True) -> None:
+        (self._owned.add if owned else self._owned.discard)(req_id)
+
+    def entries(self) -> List[RequestPlacementEntry]:
+        out = []
+        for rid, rb in self.pool.requests.items():
+            if not rb.blocks:
+                continue
+            out.append(RequestPlacementEntry(
+                req_id=rid, inst_id=self.inst_id,
+                num_blocks=len(rb.blocks), local=rid in self._owned))
+        return out
+
+    # --- heartbeat (delta unless full resync requested) ---------------- #
+    def heartbeat(self, full: bool = False) -> Heartbeat:
+        self._seq += 1
+        cur = {e.req_id: e for e in self.entries()}
+        if full:
+            send = list(cur.values())
+            removed: List[int] = []
+        else:
+            send = [e for rid, e in cur.items()
+                    if self._last_reported.get(rid) != e]
+            removed = [rid for rid in self._last_reported if rid not in cur]
+        self._last_reported = cur
+        return Heartbeat(
+            inst_id=self.inst_id, seq=self._seq, full=full, entries=send,
+            batch_size=self.batch_size,
+            mem_blocks_total=self.pool.alloc.num_blocks,
+            mem_blocks_used=self.pool.alloc.used_count,
+            removed_req_ids=removed)
+
+    # --- try_move_kvcache: FCFS reservation on the DESTINATION --------- #
+    def try_move_kvcache(self, req_id: int, num_blocks: int) -> bool:
+        """Called by a SOURCE instance before shipping KV here."""
+        return self.pool.alloc.reserve(num_blocks)
+
+    def commit_move_in(self, req_id: int, num_blocks: int,
+                       at_front: bool = True) -> Optional[List[int]]:
+        """Receive KV previously reserved. Returns local block ids."""
+        self.pool.alloc.reserved -= num_blocks
+        blocks = self.pool.adopt_blocks(req_id, num_blocks,
+                                        at_front=at_front)
+        return blocks
+
+    def cancel_move_in(self, num_blocks: int) -> None:
+        self.pool.alloc.cancel_reservation(num_blocks)
+
+    def move_out_prefix(self, req_id: int, num_blocks: int) -> int:
+        """Release the oldest n blocks of req (after shipping). Returns
+        the number actually released."""
+        popped = self.pool.pop_prefix_blocks(req_id, num_blocks)
+        return len(popped)
+
+    def release_request(self, req_id: int) -> None:
+        self.pool.release(req_id)
+        self._owned.discard(req_id)

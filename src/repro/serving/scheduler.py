@@ -1,0 +1,148 @@
+"""Cluster-level DistAttention scheduling — the paper's Algorithm 1.
+
+Greedy debtor/creditor pairing driven by the Eq. 5-7 performance model:
+debtors = instances with small batch (big marginal gain from freeing
+memory), creditors = instances with low memory utilization. For each
+debtor (ascending batch size), take its longest request and move the
+modeled-optimal number of KV blocks to the emptiest creditor, repeating
+until no move improves modeled aggregate throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.perfmodel import InstancePerfModel
+
+
+@dataclass
+class InstanceView:
+    """Scheduler's (possibly stale — heartbeat-fed) view of one instance."""
+    inst_id: int
+    batch_size: int
+    mem_blocks_total: int
+    mem_blocks_used: int
+    # req_id -> (total_len_tokens, local_blocks_here, is_owner)
+    requests: Dict[int, Tuple[int, int, bool]] = field(default_factory=dict)
+    offloaded_tokens: int = 0          # owner's KV held remotely
+    hosted_tokens: int = 0             # others' KV held here
+    alive: bool = True
+
+    @property
+    def mem_util(self) -> float:
+        return self.mem_blocks_used / max(1, self.mem_blocks_total)
+
+
+@dataclass
+class MoveDecision:
+    req_id: int
+    src: int
+    dst: int
+    num_blocks: int
+
+
+class GreedyScheduler:
+    """Algorithm 1. Thresholds are the paper's beta^thres / U^thres."""
+
+    def __init__(self, perf: InstancePerfModel, block_size: int,
+                 beta_thres: int = 64, mem_util_thres: float = 0.8,
+                 max_moves_per_round: int = 64,
+                 avg_new_req_len: int = 512):
+        self.perf = perf
+        self.bs = block_size
+        self.beta_thres = beta_thres
+        self.mem_util_thres = mem_util_thres
+        self.max_moves = max_moves_per_round
+        # Typical length of a newly-admitted request — in deployment the
+        # gManager estimates this from the recent arrival stream; it sets
+        # how much batch growth a freed block buys (paper Fig. 7a slope).
+        self.avg_new_len = avg_new_req_len
+
+    # ------------------------------------------------------------------ #
+    def _inst_tps(self, v: InstanceView) -> float:
+        lengths = [ln for (ln, _, own) in v.requests.values() if own]
+        return self.perf.tps(v.batch_size, lengths,
+                             offloaded_tokens=v.offloaded_tokens,
+                             hosted_tokens=v.hosted_tokens)
+
+    def _pair_gain(self, d: InstanceView, c: InstanceView, req_id: int,
+                   k_blocks: int) -> float:
+        """Modeled aggregate TPS delta of moving k blocks d->c (Eq. 6/7).
+
+        Freed debtor memory admits waiting work: model batch growth as one
+        extra running request per freed block's worth of a median request
+        is too aggressive; we conservatively credit only the KV-time saved
+        plus batch growth when the debtor was memory-capped (batch grows
+        by freed_tokens / avg_len).
+        """
+        tok = k_blocks * self.bs
+        base = self._inst_tps(d) + self._inst_tps(c)
+        own_lens = [ln for (ln, _, o) in d.requests.values() if o]
+        avg_len = self.avg_new_len
+        # Batch growth saturates at the compute roofline (the paper's
+        # Fig. 2(b) plateau), not at the debtor-selection threshold.
+        beta_sat = int(self.perf.hw.critical_intensity)
+        extra_batch = min(tok // avg_len,
+                          max(0, beta_sat - d.batch_size))
+        d_new = self.perf.tps(d.batch_size + extra_batch,
+                              own_lens + [avg_len] * extra_batch,
+                              offloaded_tokens=d.offloaded_tokens + tok,
+                              hosted_tokens=d.hosted_tokens)
+        c_lens = [ln for (ln, _, o) in c.requests.values() if o]
+        c_new = self.perf.tps(c.batch_size, c_lens,
+                              offloaded_tokens=c.offloaded_tokens,
+                              hosted_tokens=c.hosted_tokens + tok)
+        return (d_new + c_new) - base
+
+    # ------------------------------------------------------------------ #
+    def plan(self, views: List[InstanceView]) -> List[MoveDecision]:
+        views = [v for v in views if v.alive]
+        debtors = sorted([v for v in views
+                          if v.batch_size <= self.beta_thres],
+                         key=lambda v: v.batch_size)
+        creditors = sorted([v for v in views
+                            if v.mem_util <= self.mem_util_thres],
+                           key=lambda v: v.mem_util)
+        # An instance never acts as both (paper §5.2).
+        debtor_ids = {d.inst_id for d in debtors}
+        creditors = [c for c in creditors if c.inst_id not in debtor_ids]
+
+        moves: List[MoveDecision] = []
+        for d in debtors:
+            if not d.requests or len(moves) >= self.max_moves:
+                continue
+            # Longest owned request on the debtor.
+            owned = [(rid, ln, blk) for rid, (ln, blk, own)
+                     in d.requests.items() if own and blk > 1]
+            if not owned:
+                continue
+            rid, rlen, rblocks = max(owned, key=lambda t: t[1])
+            block_budget = rblocks - 1          # keep the live tail local
+            for c in creditors:
+                if block_budget <= 0 or len(moves) >= self.max_moves:
+                    break
+                free_blocks = (c.mem_blocks_total - c.mem_blocks_used)
+                cap = min(block_budget, free_blocks)
+                if cap <= 0:
+                    continue
+                # Search k in (0, cap] for the best modeled gain.
+                best_k, best_gain = 0, 0.0
+                step = max(1, cap // 16)
+                for k in range(step, cap + 1, step):
+                    g = self._pair_gain(d, c, rid, k)
+                    if g > best_gain:
+                        best_k, best_gain = k, g
+                if best_k <= 0:
+                    break                        # no gain from this debtor
+                moves.append(MoveDecision(rid, d.inst_id, c.inst_id, best_k))
+                # Update the views so later decisions see the effect.
+                tok = best_k * self.bs
+                d.offloaded_tokens += tok
+                d.mem_blocks_used -= best_k
+                ln, blk, own = d.requests[rid]
+                d.requests[rid] = (ln, blk - best_k, own)
+                c.hosted_tokens += tok
+                c.mem_blocks_used += best_k
+                block_budget -= best_k
+            creditors.sort(key=lambda v: v.mem_util)
+        return moves

@@ -1,0 +1,287 @@
+"""Event-driven cluster simulator (perf-model-timed) for Fig. 9/10.
+
+Simulates N serving instances at decode-step granularity with the Eq. 5-7
+performance model providing step times for TPU v5e. Three policies:
+
+  "infinite"     — Infinite-LLM: cluster-pooled KV; admission to the
+                   instance with most free memory; reactive spill +
+                   Algorithm-1 proactive moves; spanning requests pay the
+                   coverage-bounded debtor/creditor costs.
+  "vllm-multi"   — static instances, no pooling: requests that outgrow
+                   the instance are dropped (or never admitted).
+  "vllm-single"  — all chips in ONE wide-TP instance: everything fits,
+                   but every layer pays the wide-TP all-reduce cost
+                   (paper Fig. 1c) and f(beta) saturates per-chip.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.hardware import V5E
+from repro.serving.perfmodel import InstancePerfModel
+
+
+@dataclass
+class SimRequest:
+    req_id: int
+    arrival: float
+    prompt_len: int
+    output_len: int
+    generated: int = 0
+    inst: Optional[int] = None
+    offloaded: int = 0                # tokens hosted by creditors
+    finish_time: Optional[float] = None
+    failed: bool = False
+
+    @property
+    def length(self) -> int:
+        return self.prompt_len + self.generated
+
+
+@dataclass
+class SimInstance:
+    inst_id: int
+    perf: InstancePerfModel
+    kv_capacity_tokens: int
+    running: List[SimRequest] = field(default_factory=list)
+    hosted_tokens: int = 0
+    clock: float = 0.0
+    busy_until: float = 0.0
+    max_batch: int = 512
+    n_creditors: int = 1              # set by the simulator each round
+
+    @property
+    def local_tokens(self) -> int:
+        return sum(r.length - r.offloaded for r in self.running)
+
+    @property
+    def free_tokens(self) -> int:
+        return self.kv_capacity_tokens - self.local_tokens \
+            - self.hosted_tokens
+
+    def step_time(self) -> float:
+        beta = len(self.running)
+        if beta == 0 and self.hosted_tokens == 0:
+            return 1e-3
+        lens = [r.length for r in self.running]
+        off = sum(r.offloaded for r in self.running)
+        t = self.perf.t_layer(beta, lens)
+        per_chip_bw = self.perf.hw.hbm_bw * self.perf.chips
+        off_t = off * self.perf.kv_bytes_per_token_layer() / per_chip_bw
+        # Remote MicroAttention runs in PARALLEL across creditors — the
+        # debtor waits only for the slowest slice (DistAttention's
+        # bandwidth aggregation), still bounded below by local compute
+        # (paper Fig. 6a coverage).
+        slice_t = off_t / max(1, self.n_creditors)
+        t = max(t - off_t, slice_t)
+        t += self.hosted_tokens * self.perf.kv_bytes_per_token_layer() / \
+            per_chip_bw
+        return self.perf.cfg.num_layers * max(t, 1e-9)
+
+
+class ClusterSimulator:
+    def __init__(self, cfg: ModelConfig, *, policy: str,
+                 n_instances: int, chips_per_instance: int,
+                 schedule_every: float = 0.25,
+                 avg_new_len: int = 512):
+        self.cfg = cfg
+        self.policy = policy
+        self.instances: List[SimInstance] = []
+        for i in range(n_instances):
+            perf = InstancePerfModel(cfg, chips=chips_per_instance)
+            cap = perf.kv_tokens_capacity()
+            self.instances.append(SimInstance(i, perf, cap))
+        self.waiting: List[SimRequest] = []
+        self.finished: List[SimRequest] = []
+        self.failed: List[SimRequest] = []
+        self.schedule_every = schedule_every
+        self.clock = 0.0
+        self.avg_new_len = avg_new_len
+        self._next_sched = schedule_every
+        self._requeue: List[SimRequest] = []
+
+    # --------------------------------------------------------------- #
+    def _admit(self, req: SimRequest) -> bool:
+        insts = sorted(self.instances, key=lambda x: -x.free_tokens)
+        for inst in insts:
+            if len(inst.running) >= inst.max_batch:
+                continue
+            if inst.free_tokens >= req.prompt_len:
+                inst.running.append(req)
+                req.inst = inst.inst_id
+                return True
+            if self.policy == "infinite":
+                # Spill: local tail + remote prefix across creditors.
+                need = req.prompt_len - inst.free_tokens
+                donors = [d for d in self.instances if d is not inst
+                          and d.free_tokens > 0]
+                avail = sum(d.free_tokens for d in donors)
+                if avail >= need and inst.free_tokens > 0:
+                    req.inst = inst.inst_id
+                    inst.running.append(req)
+                    for d in donors:
+                        take = min(d.free_tokens, need)
+                        d.hosted_tokens += take
+                        req.offloaded += take
+                        need -= take
+                        if need <= 0:
+                            break
+                    return True
+        return False
+
+    def _preempt(self, inst: SimInstance, req: SimRequest, t: float):
+        """vLLM-style preemption: drop KV, requeue (recompute on resume)."""
+        inst.running.remove(req)
+        freed = req.offloaded
+        for d in self.instances:
+            if freed <= 0:
+                break
+            take = min(d.hosted_tokens, freed)
+            d.hosted_tokens -= take
+            freed -= take
+        req.offloaded = 0
+        req.inst = None
+        req.arrival = t                     # back of the queue
+        self._requeue.append(req)
+
+    def _spill(self, inst: SimInstance, t: float = 0.0):
+        """Reactive: keep the instance under its memory capacity; when the
+        cluster pool is exhausted, PREEMPT (never corrupt, never fail)."""
+        while inst.free_tokens < 0:
+            victim = max(inst.running, key=lambda r: r.length - r.offloaded,
+                         default=None)
+            if victim is None:
+                break
+            donors = sorted((d for d in self.instances if d is not inst
+                             and d.free_tokens > 256),
+                            key=lambda d: -d.free_tokens)
+            chunk = 0
+            if donors:
+                chunk = min(-inst.free_tokens + 256, donors[0].free_tokens,
+                            victim.length - victim.offloaded - 256)
+            if chunk <= 0:
+                self._preempt(inst, victim, t)
+                continue
+            donors[0].hosted_tokens += chunk
+            victim.offloaded += chunk
+
+    def _proactive(self):
+        """Algorithm-1-flavored balancing at simulator granularity."""
+        debtors = sorted((i for i in self.instances
+                          if 0 < len(i.running) <= 8
+                          or i.free_tokens < i.kv_capacity_tokens // 10),
+                         key=lambda i: len(i.running))
+        creditors = sorted((i for i in self.instances
+                            if i.free_tokens > i.kv_capacity_tokens // 3),
+                           key=lambda i: -i.free_tokens)
+        for d in debtors:
+            if not d.running:
+                continue
+            longest = max(d.running, key=lambda r: r.length - r.offloaded)
+            movable = longest.length - longest.offloaded - 256
+            if movable < 1024:
+                continue
+            for c in creditors:
+                if c is d or c.free_tokens < 1024:
+                    continue
+                take = min(movable, c.free_tokens // 2)
+                c.hosted_tokens += take
+                longest.offloaded += take
+                break
+
+    # --------------------------------------------------------------- #
+    def run(self, requests: List[SimRequest], *, horizon: float = 600.0
+            ) -> Dict[str, float]:
+        """Event-driven: every instance advances on its OWN clock (an
+        instance hosting heavy MicroAttention slows only itself, as in
+        the real asynchronous cluster)."""
+        import heapq
+        pending = sorted(requests, key=lambda r: r.arrival)
+        tokens_done = 0
+        heap = [(0.0, i.inst_id) for i in self.instances]
+        heapq.heapify(heap)
+
+        while heap and (pending or any(i.running for i in self.instances)):
+            t, iid = heapq.heappop(heap)
+            if t > horizon:
+                break
+            self.clock = max(self.clock, t)
+            inst = self.instances[iid]
+
+            # Admit arrivals up to this time.
+            while pending and pending[0].arrival <= t:
+                req = pending[0]
+                if self.policy != "infinite" and \
+                        req.prompt_len + req.output_len > \
+                        self.instances[0].kv_capacity_tokens:
+                    req.failed = True
+                    self.failed.append(req)
+                    pending.pop(0)
+                    continue
+                if self._admit(req):
+                    pending.pop(0)
+                else:
+                    break                        # head-of-line wait
+
+            if self.policy == "infinite" and t >= self._next_sched:
+                self._proactive()
+                self._next_sched = t + self.schedule_every
+
+            if not inst.running:
+                # Idle: wake at the next arrival (or a coarse tick if the
+                # head of line is blocked on memory elsewhere).
+                nxt = (pending[0].arrival if pending else t + 0.05)
+                heapq.heappush(heap, (max(nxt, t + 0.05), iid))
+                continue
+
+            # One decode step for THIS instance.
+            inst.n_creditors = max(1, sum(1 for d in self.instances
+                                          if d.hosted_tokens > 0))
+            dt = inst.step_time()
+            for r in list(inst.running):
+                r.generated += 1
+                tokens_done += 1
+                if r.generated >= r.output_len:
+                    r.finish_time = t + dt
+                    inst.running.remove(r)
+                    freed = r.offloaded
+                    for d in self.instances:
+                        if freed <= 0:
+                            break
+                        take = min(d.hosted_tokens, freed)
+                        d.hosted_tokens -= take
+                        freed -= take
+                    self.finished.append(r)
+            if self.policy == "infinite":
+                self._spill(inst, t)
+            if self._requeue:
+                pending.extend(self._requeue)
+                pending.sort(key=lambda r: r.arrival)
+                self._requeue.clear()
+            heapq.heappush(heap, (t + dt, iid))
+
+        lat = [r.finish_time - r.arrival for r in self.finished
+               if r.finish_time]
+        return {
+            "throughput_tok_s": tokens_done / max(self.clock, 1e-9),
+            "finished": len(self.finished),
+            "failed": len(self.failed),
+            "p50_latency": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p99_latency": float(np.percentile(lat, 99)) if lat else 0.0,
+            "clock": self.clock,
+        }
+
+
+def make_policy_cluster(cfg: ModelConfig, policy: str, total_chips: int,
+                        chips_per_instance: int) -> ClusterSimulator:
+    if policy == "vllm-single":
+        return ClusterSimulator(cfg, policy=policy, n_instances=1,
+                                chips_per_instance=total_chips)
+    n = total_chips // chips_per_instance
+    return ClusterSimulator(cfg, policy=policy, n_instances=n,
+                            chips_per_instance=chips_per_instance)

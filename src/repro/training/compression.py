@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback (distributed-opt trick).
+
+Per-tensor symmetric quantization: g ~ scale * int8. The quantization
+residual is carried in an error-feedback buffer and added back next step,
+so compression introduces no bias in the long run (EF-SGD style). Used on
+the data/pod-axis gradient all-reduce to cut cross-pod DCN traffic 4x
+versus fp32 (2x vs bf16); enable with TrainConfig.grad_compression.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads_with_ef(grads, ef):
+    """Returns (quantized pytree of (q, scale), new_ef).
+
+    new_ef holds the quantization residual, re-injected next step.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return (q, s), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_ef = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return qtree, new_ef
+
+
+def decompress_grads(qtree):
+    """Inverse of compress (after the int8 all-reduce/all-gather)."""
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), qtree,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and not isinstance(x[0], tuple))

@@ -1,0 +1,87 @@
+"""AdamW (pure JAX), with optional bf16 moment storage for 1T-scale runs.
+
+State layout mirrors the parameter pytree, so ZeRO-style sharding of
+optimizer state falls out of the sharding rules (state shards like its
+parameter, over the ``data`` axis when FSDP is on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"      # "bfloat16" halves optimizer HBM
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_adamw(params, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state: AdamWState, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    step = state.step + 1
+    lr = lr_schedule(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        v32 = v.astype(jnp.float32) * cfg.b2 + g * g * (1 - cfg.b2)
+        update = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * update
+        return new_p.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}

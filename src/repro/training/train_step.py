@@ -1,0 +1,117 @@
+"""Train step: masked LM loss, remat, microbatch accumulation, AdamW.
+
+The step is GSPMD-friendly (pure global-view jnp; sharding comes from the
+in/out shardings set by the launcher). Gradient int8-compression with
+error feedback is applied numerically before the update (the wire-level
+pod-axis variant lives in ``repro.training.grad_sync`` and is exercised
+by the multi-pod lowering).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.training.compression import (compress_grads_with_ef,
+                                        decompress_grads,
+                                        init_error_feedback)
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    capacity_factor: float = 1.25
+    grad_compression: bool = False
+    attn_chunk: int = 512
+    moe_ep_groups: int = 0   # >1: 2D EP dispatch (see repro.models.moe)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any                  # error-feedback buffers (or None)
+
+
+def init_train_state(params, adam_cfg: AdamWConfig, tcfg: TrainConfig
+                     ) -> TrainState:
+    ef = init_error_feedback(params) if tcfg.grad_compression else None
+    return TrainState(params, init_adamw(params, adam_cfg), ef)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, mask, tcfg: TrainConfig,
+            embeds=None, layer_constraints=None):
+    """tokens [B, S+1]; mask [B, S]. Returns (loss, metrics)."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits, aux = forward(params, cfg, inp, embeds, backend="xla",
+                          chunk=tcfg.attn_chunk, remat=tcfg.remat,
+                          capacity_factor=tcfg.capacity_factor,
+                          ep_groups=tcfg.moe_ep_groups,
+                          layer_constraints=layer_constraints)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tgt_logit = jnp.take_along_axis(
+        logits.astype(jnp.float32), tgt[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt_logit) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    loss = ce + tcfg.moe_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux,
+                  "tokens": denom}
+
+
+def train_step(state: TrainState, tokens, mask, *, cfg: ModelConfig,
+               tcfg: TrainConfig, adam_cfg: AdamWConfig,
+               embeds=None, layer_constraints=None
+               ) -> Tuple[TrainState, dict]:
+    """One optimizer step (optionally accumulated over microbatches)."""
+    grad_fn = jax.value_and_grad(
+        lambda p, t, m, e: lm_loss(p, cfg, t, m, tcfg, e,
+                                   layer_constraints), has_aux=True)
+
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = grad_fn(state.params, tokens, mask, embeds)
+    else:
+        n = tcfg.microbatches
+        B = tokens.shape[0]
+        assert B % n == 0, "global batch must divide microbatches"
+        tks = tokens.reshape(n, B // n, *tokens.shape[1:])
+        mks = mask.reshape(n, B // n, *mask.shape[1:])
+        embs = (None if embeds is None
+                else embeds.reshape(n, B // n, *embeds.shape[1:]))
+
+        def acc_body(carry, xs):
+            g_acc, l_acc = carry
+            if embs is None:
+                tk, mk = xs
+                (l, _), g = grad_fn(state.params, tk, mk, None)
+            else:
+                tk, mk, eb = xs
+                (l, _), g = grad_fn(state.params, tk, mk, eb)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             state.params)
+        xs = (tks, mks) if embs is None else (tks, mks, embs)
+        (grads, loss_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), xs)
+        grads = jax.tree.map(lambda g: g / n, grads)
+        loss = loss_sum / n
+        metrics = {}
+
+    ef = state.ef
+    if tcfg.grad_compression:
+        qgrads, ef = compress_grads_with_ef(grads, ef)
+        grads = decompress_grads(qgrads)
+
+    params, opt, opt_metrics = adamw_update(state.params, grads, state.opt,
+                                            adam_cfg)
+    out = {"loss": loss, **opt_metrics}
+    return TrainState(params, opt, ef), out

@@ -1,0 +1,142 @@
+"""DistAttention == full attention, over arbitrary sequence partitions.
+
+This is the paper's core mathematical claim (Eq. 1 == Eq. 2+3); we check it
+property-style with hypothesis over head layouts (MHA/GQA/MQA), partition
+shapes, masks, and dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    dist_attention_decode, dist_attention_prefill,
+    full_attention_decode, full_attention_prefill,
+    merge_partials, micro_attention_decode,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def _split_points(rng, S, n_parts):
+    cuts = sorted(rng.choice(np.arange(1, S), size=n_parts - 1, replace=False)) \
+        if n_parts > 1 else []
+    return [0] + list(cuts) + [S]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 3),
+    K=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2, 4]),     # query heads per kv head
+    D=st.sampled_from([8, 16]),
+    S=st.integers(4, 64),
+    n_parts=st.integers(1, 5),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_partition_equivalence(B, K, G, D, S, n_parts, dtype, seed):
+    n_parts = min(n_parts, S)
+    H = K * G
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, km = jax.random.split(key, 4)
+    q = _rand(kq, (B, H, D), dtype)
+    k = _rand(kk, (B, S, K, D), dtype)
+    v = _rand(kv, (B, S, K, D), dtype)
+    mask = jax.random.bernoulli(km, 0.8, (B, S))
+    ref = full_attention_decode(q, k, v, mask)
+
+    rng = np.random.default_rng(seed)
+    pts = _split_points(rng, S, n_parts)
+    parts = [(k[:, a:b], v[:, a:b], mask[:, a:b])
+             for a, b in zip(pts[:-1], pts[1:])]
+    rng.shuffle(parts)                   # placement order must not matter
+    out = dist_attention_decode(q, parts)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    K=st.sampled_from([1, 2]),
+    G=st.sampled_from([1, 3]),
+    T=st.integers(1, 16),
+    S_extra=st.integers(0, 16),
+    n_parts=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_partition_equivalence(B, K, G, T, S_extra, n_parts, seed):
+    """Chunked causal prefill: queries at [S_past, S_past+T) over split KV."""
+    H, D = K * G, 8
+    S = T + S_extra                       # total KV = past + current
+    n_parts = min(n_parts, S)
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (B, T, H, D))
+    k = _rand(kk, (B, S, K, D))
+    v = _rand(kv, (B, S, K, D))
+    ref = full_attention_prefill(q, k, v, q_offset=S_extra)
+
+    rng = np.random.default_rng(seed)
+    pts = _split_points(rng, S, n_parts)
+    kv_pos_full = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    parts = [(k[:, a:b], v[:, a:b], kv_pos_full[:, a:b],
+              jnp.ones((B, b - a), bool)) for a, b in zip(pts[:-1], pts[1:])]
+    rng.shuffle(parts)
+    q_pos = S_extra + jnp.arange(T, dtype=jnp.int32)[None].repeat(B, 0)
+    out = dist_attention_prefill(q, parts, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_empty_partition_is_identity():
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (2, 4, 8))
+    k = _rand(key, (2, 10, 2, 8))
+    v = _rand(key, (2, 10, 2, 8))
+    mask = jnp.ones((2, 10), bool)
+    ref = full_attention_decode(q, k, v, mask)
+    # Insert a fully-masked slice — contributes identity to the merge.
+    empty_mask = jnp.zeros((2, 3), bool)
+    parts = [(k[:, :5], v[:, :5], mask[:, :5]),
+             (k[:, :3], v[:, :3], empty_mask),
+             (k[:, 5:], v[:, 5:], mask[:, 5:])]
+    out = dist_attention_decode(q, parts)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_all_masked_yields_zeros_not_nan():
+    key = jax.random.PRNGKey(1)
+    q = _rand(key, (1, 2, 4))
+    k = _rand(key, (1, 6, 2, 4))
+    v = _rand(key, (1, 6, 2, 4))
+    out = full_attention_decode(q, k, v, jnp.zeros((1, 6), bool))
+    assert not np.any(np.isnan(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), 0.0)
+
+
+def test_merge_partials_matches_sequential_combine():
+    key = jax.random.PRNGKey(2)
+    q = _rand(key, (2, 4, 8))
+    parts = []
+    for i in range(4):
+        k = _rand(jax.random.fold_in(key, i), (2, 7, 2, 8))
+        v = _rand(jax.random.fold_in(key, 100 + i), (2, 7, 2, 8))
+        parts.append(micro_attention_decode(q, k, v, jnp.ones((2, 7), bool)))
+    o = jnp.stack([p[0] for p in parts])
+    m = jnp.stack([p[1] for p in parts])
+    l = jnp.stack([p[2] for p in parts])
+    og, mg, lg = merge_partials(o, m, l, axis=0)
+    from repro.core import combine, empty_partial, finalize
+    acc = empty_partial((2, 4, 8), (2, 4))
+    for p in parts:
+        acc = combine(acc, p)
+    np.testing.assert_allclose(np.asarray(finalize(og, lg)),
+                               np.asarray(finalize(acc[0], acc[2])), atol=1e-6)

@@ -1,0 +1,213 @@
+"""Unit + property tests: block allocator invariants, perf model shape,
+Algorithm-1 scheduler behaviour, heartbeat protocol."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.serving.kvpool import BlockAllocator, RankKVPool
+from repro.serving.perfmodel import InstancePerfModel
+from repro.serving.scheduler import GreedyScheduler, InstanceView
+from repro.serving.gmanager import GManager
+from repro.serving.rmanager import RManager
+from repro.serving.protocol import RequestPlacementEntry
+
+
+# ------------------------------------------------------------------ #
+# Allocator invariants (hypothesis)
+# ------------------------------------------------------------------ #
+@settings(max_examples=50, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["alloc", "free", "reserve",
+                                               "cancel"]),
+                              st.integers(1, 8)), max_size=60))
+def test_allocator_never_double_allocates(ops):
+    a = BlockAllocator(32, 16)
+    live = {}
+    rid = 0
+    for op, n in ops:
+        if op == "alloc":
+            got = a.alloc(n, rid)
+            if got is not None:
+                for b in got:
+                    assert b not in set().union(*live.values()) if live \
+                        else True
+                    assert 0 <= b < 32
+                live[rid] = set(got)
+                rid += 1
+        elif op == "free" and live:
+            k = sorted(live)[0]
+            a.free(sorted(live.pop(k)))
+        elif op == "reserve":
+            a.reserve(n)
+        elif op == "cancel":
+            a.cancel_reservation(n)
+        allocated = set().union(*live.values()) if live else set()
+        assert len(allocated) == a.used_count
+        assert a.free_count >= 0
+        assert a.free_count + a.reserved + a.used_count == 32
+
+
+def test_pool_append_and_prefix_pop():
+    p = RankKVPool(num_blocks=8, block_size=4)
+    assert p.append_tokens(1, 10)          # 3 blocks, tail=2
+    assert p.tokens_of(1) == 10
+    assert p.alloc.used_count == 3
+    popped = p.pop_prefix_blocks(1, 2)
+    assert len(popped) == 2
+    assert p.tokens_of(1) == 2             # 1 block, tail 2
+    assert p.append_tokens(1, 2)           # fills tail, no new block
+    assert p.alloc.used_count == 1
+    p.release(1)
+    assert p.alloc.used_count == 0
+
+
+def test_pool_rejects_when_full():
+    p = RankKVPool(num_blocks=2, block_size=4)
+    assert p.append_tokens(1, 8)
+    assert not p.append_tokens(2, 1)
+
+
+# ------------------------------------------------------------------ #
+# Perf model (paper Fig. 2 / Fig. 7 shapes)
+# ------------------------------------------------------------------ #
+def test_perfmodel_batch_saturation():
+    m = InstancePerfModel(get_config("olmo-1b"))
+    tps = [m.tps(b, [500] * b) for b in (1, 8, 64, 256, 512)]
+    assert all(t2 > t1 for t1, t2 in zip(tps, tps[1:3]))  # ramps up
+    # Saturation: doubling batch far past critical intensity gains little.
+    assert tps[-1] / tps[-2] < 1.7
+
+
+def test_perfmodel_debtor_creditor_aggregate_peak():
+    """Fig. 7(c): aggregate TPS rises (debtor batch grows into the freed
+    memory) then falls (creditor keeps paying the hosted-KV time)."""
+    cfg = get_config("olmo-1b")
+    m = InstancePerfModel(cfg)
+    long_len = 1_000_000                   # the paper's Fig. 7 debtor
+    spare = 300_000                        # creditor's surplus KV tokens
+    agg = []
+    for off in range(0, 1_000_001, 50_000):
+        # Freed debtor memory admits extra 500-token requests, capped at
+        # compute saturation (paper Fig. 2b plateau).
+        extra = min(off // 2_000, 240)
+        debtor = m.tps(1 + extra, [long_len] + [500] * extra,
+                       offloaded_tokens=off)
+        # Past its surplus, the creditor evicts its own requests to host
+        # more KV — the Fig. 7(b) "steeper decline".
+        c_beta = 128 - max(0, off - spare) // 5_000
+        creditor = m.tps(c_beta, [5_000] * c_beta, hosted_tokens=off)
+        agg.append(debtor + creditor)
+    peak = int(np.argmax(agg))
+    assert agg[peak] > agg[0] * 1.05       # moving blocks helps
+    assert agg[-1] < agg[peak]             # and overdoing it hurts
+
+
+# ------------------------------------------------------------------ #
+# Algorithm 1
+# ------------------------------------------------------------------ #
+def _view(iid, batch, used, total, reqs, hosted=0):
+    return InstanceView(inst_id=iid, batch_size=batch,
+                        mem_blocks_total=total, mem_blocks_used=used,
+                        requests=reqs, hosted_tokens=hosted)
+
+
+def test_scheduler_moves_from_debtor_to_creditor():
+    cfg = get_config("olmo-1b")
+    bs = 512
+    sched = GreedyScheduler(InstancePerfModel(cfg), block_size=bs,
+                            beta_thres=8, mem_util_thres=0.5)
+    debtor = _view(0, 2, 95, 100, {7: (bs * 90, 90, True),
+                                   8: (bs * 5, 5, True)})
+    creditor = _view(1, 32, 10, 100, {9: (bs * 10, 10, True)})
+    moves = sched.plan([debtor, creditor])
+    assert moves, "expected at least one move"
+    assert all(m.src == 0 and m.dst == 1 for m in moves)
+    assert all(m.req_id == 7 for m in moves)   # longest request picked
+    total = sum(m.num_blocks for m in moves)
+    assert 0 < total <= 89                     # keeps the live tail local
+
+
+def test_scheduler_never_makes_instance_both_roles():
+    cfg = get_config("olmo-1b")
+    sched = GreedyScheduler(InstancePerfModel(cfg), block_size=16,
+                            beta_thres=64, mem_util_thres=0.9)
+    # Everyone qualifies as debtor AND creditor by thresholds.
+    views = [_view(i, 4, 10, 100, {i * 10: (800, 50, True)})
+             for i in range(4)]
+    moves = sched.plan(views)
+    srcs = {m.src for m in moves}
+    dsts = {m.dst for m in moves}
+    assert not (srcs & dsts)
+
+
+def test_scheduler_respects_creditor_capacity():
+    cfg = get_config("olmo-1b")
+    sched = GreedyScheduler(InstancePerfModel(cfg), block_size=16,
+                            beta_thres=8, mem_util_thres=0.5)
+    debtor = _view(0, 1, 100, 100, {1: (16 * 100, 100, True)})
+    creditor = _view(1, 32, 97, 100, {2: (160, 10, True)})
+    moves = sched.plan([debtor, creditor])
+    assert sum(m.num_blocks for m in moves) <= 3
+
+
+# ------------------------------------------------------------------ #
+# Protocol: heartbeats, deltas, failover resync
+# ------------------------------------------------------------------ #
+def test_heartbeat_delta_encoding():
+    rm = RManager(0, num_blocks=16, block_size=4)
+    rm.pool.append_tokens(1, 8)
+    rm.set_owner(1)
+    hb1 = rm.heartbeat(full=True)
+    assert len(hb1.entries) == 1 and hb1.entries[0].num_blocks == 2
+    hb2 = rm.heartbeat()                       # nothing changed
+    assert not hb2.entries and not hb2.removed_req_ids
+    rm.pool.append_tokens(1, 8)
+    hb3 = rm.heartbeat()
+    assert len(hb3.entries) == 1 and hb3.entries[0].num_blocks == 4
+    rm.release_request(1)
+    hb4 = rm.heartbeat()
+    assert hb4.removed_req_ids == [1]
+
+
+def test_gmanager_requires_full_on_new_instance_and_seq_gap():
+    cfg = get_config("olmo-1b")
+    gm = GManager(InstancePerfModel(cfg), block_size=4)
+    rm = RManager(0, 16, 4)
+    rm.pool.append_tokens(1, 8)
+    assert not gm.on_heartbeat(rm.heartbeat(), now=0.0)   # delta first: no
+    assert gm.on_heartbeat(rm.heartbeat(full=True), now=0.1)
+    rm.heartbeat()                             # this delta gets "lost"
+    assert not gm.on_heartbeat(rm.heartbeat(), now=0.2)   # seq gap
+    assert gm.on_heartbeat(rm.heartbeat(full=True), now=0.3)
+
+
+def test_gmanager_failover_rebuilds_from_full_heartbeats():
+    cfg = get_config("olmo-1b")
+    rms = [RManager(i, 16, 4) for i in range(3)]
+    rms[0].pool.append_tokens(5, 12)
+    rms[0].set_owner(5)
+    rms[1].pool.append_tokens(5, 8)            # creditor slice of req 5
+    gm2 = GManager(InstancePerfModel(cfg), block_size=4)   # new gManager
+    for rm in rms:
+        assert gm2.on_heartbeat(rm.heartbeat(full=True), now=1.0)
+    assert gm2.owner_of(5) == 0
+    assert set(gm2.requests_touching(1)) == {5}
+
+
+def test_gmanager_liveness_timeout():
+    cfg = get_config("olmo-1b")
+    gm = GManager(InstancePerfModel(cfg), block_size=4,
+                  heartbeat_timeout=1.0)
+    rm = RManager(0, 16, 4)
+    gm.on_heartbeat(rm.heartbeat(full=True), now=0.0)
+    assert gm.check_liveness(now=0.5) == []
+    assert gm.check_liveness(now=2.0) == [0]
+
+
+def test_try_move_fcfs_rejection():
+    rm = RManager(0, num_blocks=4, block_size=4)
+    assert rm.try_move_kvcache(1, 3)
+    assert not rm.try_move_kvcache(2, 2)       # only 1 left unreserved
+    assert rm.try_move_kvcache(2, 1)
+    got = rm.commit_move_in(1, 3)
+    assert got is not None and len(got) == 3

@@ -1,0 +1,23 @@
+"""Launch-layer regression: every cell kind lowers+compiles on a mini
+multi-pod mesh; compressed cross-pod grad sync is exact mod int8
+(subprocess: needs its own fake-device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_launch_cells_and_grad_sync():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "launch_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL OK" in r.stdout

@@ -1,0 +1,94 @@
+"""Roofline HLO parsing, trace generator fidelity, cluster simulator."""
+import numpy as np
+import pytest
+
+from benchmarks.traces import TRACE_SPECS, gen_trace, trace_stats
+from repro.configs import get_config
+from repro.launch.roofline import (_shape_bytes, collective_bytes_from_hlo,
+                                   model_mandatory_bytes,
+                                   model_useful_flops)
+from repro.configs.base import SHAPES
+from repro.serving.simulator import SimRequest, make_policy_cluster
+
+
+def test_shape_bytes_parsing():
+    assert _shape_bytes("f32[32]{0}") == 128
+    assert _shape_bytes("bf16[4,8]{1,0}") == 64
+    assert _shape_bytes("(f32[2,2]{1,0}, s8[16]{0})") == 32
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_collective_parser_trip_counts():
+    hlo = """
+HloModule test, num_partitions=8
+
+%body (p: (s32[], f32[4]{0})) -> (s32[], f32[4]{0}) {
+  %ar = f32[4]{0} all-reduce(%x), channel_id=1
+  ROOT %t = (s32[], f32[4]{0}) tuple(%i, %ar)
+}
+
+%cond (p.1: (s32[], f32[4]{0})) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %ag = f32[32]{0} all-gather(%a), channel_id=2
+  %w = (s32[], f32[4]{0}) while(%init), condition=%cond, body=%body
+  ROOT %g = f32[4]{0} get-tuple-element(%w), index=1
+}
+"""
+    got = collective_bytes_from_hlo(hlo)
+    assert got["all-gather"] == 32 * 4
+    assert got["all-reduce"] == 4 * 4 * 12       # x trip count
+
+
+def test_model_flops_and_bytes_positive():
+    for arch in ("olmo-1b", "kimi-k2-1t-a32b", "xlstm-350m"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            assert model_useful_flops(cfg, shape) > 0
+            assert model_mandatory_bytes(cfg, shape) > 0
+    # MoE useful flops must track ACTIVE params, not total.
+    kimi = get_config("kimi-k2-1t-a32b")
+    dense_equiv = model_useful_flops(kimi, SHAPES["train_4k"])
+    assert dense_equiv < 6 * kimi.param_count() * 4096 * 256 * 0.2
+
+
+def test_trace_stats_match_table1():
+    for tid, (rmax, avg, sd) in TRACE_SPECS.items():
+        ga, gs, gmin, gmax = trace_stats(tid, n=4000)
+        assert gmax <= rmax and gmin >= 1
+        assert abs(ga - avg) / avg < 0.25, (tid, ga, avg)
+
+
+def test_simulator_policies_run_and_finish():
+    cfg = get_config("mistral-nemo-12b")
+    reqs = gen_trace(1, 40, rate=4.0)
+    sim_reqs = [SimRequest(i, r.arrival, r.prompt_len, r.output_len)
+                for i, r in enumerate(reqs)]
+    for policy in ("infinite", "vllm-multi", "vllm-single"):
+        sim = make_policy_cluster(cfg, policy, total_chips=16,
+                                  chips_per_instance=4)
+        out = sim.run([SimRequest(r.req_id, r.arrival, r.prompt_len,
+                                  r.output_len) for r in sim_reqs],
+                      horizon=500.0)
+        assert out["finished"] + out["failed"] == len(sim_reqs)
+        assert out["throughput_tok_s"] > 0
+
+
+def test_simulator_infinite_serves_oversized_request():
+    """A request too big for ONE instance must still finish under the
+    'infinite' policy (pooled) and fail under vllm-multi."""
+    cfg = get_config("mistral-nemo-12b")
+    from repro.serving.perfmodel import InstancePerfModel
+    cap = InstancePerfModel(cfg, chips=2).kv_tokens_capacity()
+    big = [SimRequest(0, 0.0, int(cap * 1.5), 32)]
+    inf = make_policy_cluster(cfg, "infinite", 8, 2)
+    out_inf = inf.run([SimRequest(0, 0.0, int(cap * 1.5), 32)],
+                      horizon=300.0)
+    multi = make_policy_cluster(cfg, "vllm-multi", 8, 2)
+    out_multi = multi.run([SimRequest(0, 0.0, int(cap * 1.5), 32)],
+                          horizon=300.0)
+    assert out_inf["finished"] == 1
+    assert out_multi["failed"] == 1

@@ -1,0 +1,22 @@
+"""Mesh-level serving step correctness (8 fake devices via subprocess —
+the main test process must keep its single-device view)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_sharded_decode_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "sharded_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL OK" in r.stdout

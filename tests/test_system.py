@@ -1,0 +1,37 @@
+"""End-to-end behaviour tests for the paper's system (top level)."""
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
+from repro.models.model import init_params
+from repro.serving import Cluster, Request, RequestState, SamplingParams
+
+
+def test_all_archs_registered_with_exact_dims():
+    assert len(ARCH_IDS) == 10
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert (kimi.num_layers, kimi.d_model, kimi.num_experts,
+            kimi.top_k) == (61, 7168, 384, 8)
+    assert abs(kimi.param_count() / 1e12 - 1.03) < 0.05      # ~1T
+    assert abs(kimi.active_param_count() / 1e9 - 33.7) < 2   # ~A32B
+    assert len(SHAPES) == 4
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_system_end_to_end_mixed_cluster():
+    """The paper's headline behaviour, end to end at smoke scale: a
+    cluster serves a mix of short requests and one request whose KV
+    exceeds any single instance, with exact greedy outputs."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=32,
+                 pool_blocks=32, block_size=8, move_chunk_tokens=8)
+    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
+                    sampling=SamplingParams(max_new_tokens=6))
+            for n in (5, 50, 9)]
+    for r in reqs:
+        cl.submit(r)
+    cl.run_until_done(max_steps=300)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert cl.throughput_stats["kv_moved_bytes"] > 0

@@ -1,0 +1,160 @@
+"""Training stack: optimizer, loss descent, microbatching equivalence,
+grad compression EF, data determinism, checkpoint/restart fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, restore_train_state, \
+    save_train_state
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.training.compression import (compress_grads_with_ef,
+                                        decompress_grads,
+                                        init_error_feedback)
+from repro.training.data import DataConfig, batch_for_step
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (TrainConfig, init_train_state,
+                                       lm_loss, train_step)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _batch(cfg, B=4, S=16, seed=0):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=S, global_batch=B,
+                    seed=seed)
+    toks, mask = batch_for_step(dc, 0)
+    return jnp.asarray(toks), jnp.asarray(mask)
+
+
+def test_loss_decreases(setup):
+    cfg, params = setup
+    tcfg = TrainConfig(remat=False, microbatches=1)
+    acfg = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=100)
+    state = init_train_state(params, acfg, tcfg)
+    toks, mask = _batch(cfg)
+    step = jax.jit(lambda s, t, m: train_step(
+        s, t, m, cfg=cfg, tcfg=tcfg, adam_cfg=acfg))
+    losses = []
+    for _ in range(8):
+        state, out = step(state, toks, mask)
+        losses.append(float(out["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_remat_same_loss_and_grads(setup):
+    cfg, params = setup
+    toks, mask = _batch(cfg)
+    l1, _ = lm_loss(params, cfg, toks, mask, TrainConfig(remat=False))
+    l2, _ = lm_loss(params, cfg, toks, mask, TrainConfig(remat=True))
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: lm_loss(p, cfg, toks, mask,
+                                    TrainConfig(remat=False))[0])(params)
+    g2 = jax.grad(lambda p: lm_loss(p, cfg, toks, mask,
+                                    TrainConfig(remat=True))[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_microbatch_accumulation_matches_full_batch(setup):
+    cfg, params = setup
+    toks, mask = _batch(cfg, B=4)
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+    s_full = init_train_state(params, acfg, TrainConfig(remat=False))
+    s_micro = init_train_state(params, acfg, TrainConfig(remat=False,
+                                                         microbatches=2))
+    s1, o1 = train_step(s_full, toks, mask, cfg=cfg,
+                        tcfg=TrainConfig(remat=False), adam_cfg=acfg)
+    s2, o2 = train_step(s_micro, toks, mask, cfg=cfg,
+                        tcfg=TrainConfig(remat=False, microbatches=2),
+                        adam_cfg=acfg)
+    # Loss normalization differs (per-microbatch token counts), but the
+    # parameters should move almost identically for uniform masks.
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=5e-3, rtol=5e-2)
+
+
+def test_grad_compression_error_feedback_unbiased():
+    """EF: the residual carries over so sum of dequantized grads over
+    steps tracks the true sum (no systematic bias)."""
+    key = jax.random.PRNGKey(0)
+    g_true = {"w": jax.random.normal(key, (64, 64)) * 1e-3}
+    ef = init_error_feedback(g_true)
+    acc = jnp.zeros((64, 64))
+    for i in range(20):
+        q, ef = compress_grads_with_ef(g_true, ef)
+        acc = acc + decompress_grads(q)["w"]
+    err = float(jnp.max(jnp.abs(acc - 20 * g_true["w"])))
+    scale = float(jnp.max(jnp.abs(g_true["w"])))
+    assert err < scale, "error feedback failed to bound drift"
+
+
+def test_data_pipeline_deterministic_and_restartable():
+    dc = DataConfig(vocab_size=100, seq_len=32, global_batch=2, seed=7)
+    t1, m1 = batch_for_step(dc, 5)
+    t2, m2 = batch_for_step(dc, 5)
+    np.testing.assert_array_equal(t1, t2)
+    np.testing.assert_array_equal(m1, m2)
+    t3, _ = batch_for_step(dc, 6)
+    assert not np.array_equal(t1, t3)
+
+
+def test_checkpoint_restart_identical_training(tmp_path, setup):
+    """Kill-and-restore mid-run: the restarted run reproduces the original
+    trajectory exactly (deterministic pipeline + restored state)."""
+    cfg, params = setup
+    tcfg = TrainConfig(remat=False)
+    acfg = AdamWConfig(lr=1e-3, warmup_steps=2)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2,
+                    seed=1)
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+
+    def run(state, start, n, save_at=None):
+        for s in range(start, start + n):
+            toks, mask = batch_for_step(dc, s)
+            state, out = train_step(state, jnp.asarray(toks),
+                                    jnp.asarray(mask), cfg=cfg, tcfg=tcfg,
+                                    adam_cfg=acfg)
+            if save_at is not None and s == save_at:
+                save_train_state(ckpt, s, state)
+        return state, out
+
+    state0 = init_train_state(params, acfg, tcfg)
+    final, out_a = run(state0, 0, 6, save_at=2)
+
+    # "Crash" after step 2; restore and replay steps 3..5.
+    step = ckpt.latest()
+    assert step == 2
+    like = init_train_state(params, acfg, tcfg)
+    restored = restore_train_state(ckpt, step, like)
+    refinal, out_b = run(restored, 3, 3)
+    np.testing.assert_allclose(float(out_a["loss"]), float(out_b["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(final.params),
+                    jax.tree.leaves(refinal.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {"a": jnp.ones((4,)), "b": {"c": jnp.zeros((2, 2))}}
+    for s in (1, 2, 3):
+        ck.save(s, tree)
+    assert ck.steps() == [2, 3]                 # GC kept last 2
+    # Simulate crash: stale .tmp dir must be ignored + reaped.
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert ck.latest() == 3
+    ck.save(4, tree)
+    assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
