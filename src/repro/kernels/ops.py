@@ -56,18 +56,43 @@ def flash_prefill(q, k, v, *, scale=None, window=0, bq=128, bk=128,
     return out[:, :S, :, :D]
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_micro_attention_jnp(q, pool_k, pool_v, table, tail_len, *,
+                              scale=None):
+    """Pure-jnp paged MicroAttention partial — the gather fallback.
+
+    Same contract as ``paged_micro_attention`` but built from a plain
+    gather + ``micro_attention_decode`` so it fuses into surrounding jit
+    code (e.g. the serving decode scan) on any backend, no Pallas needed.
+    """
+    from repro.core.distattn import gather_local_kv, local_mask_from_table
+    from repro.core.online_softmax import micro_attention_decode
+    bs = pool_k.shape[1]
+    k, v = gather_local_kv(pool_k, pool_v, table)
+    mask = local_mask_from_table(table, bs, tail_len)
+    return micro_attention_decode(q, k, v, mask, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "backend"))
 def paged_micro_attention(q, pool_k, pool_v, table, tail_len, *,
-                          scale=None, interpret=None):
+                          scale=None, interpret=None, backend=None):
     """Paged DistAttention MicroAttention partial (decode).
 
     q [R,H,D]; pool_k/v [NB,bs,K,D]; table [R,MB] (-1 padded, seq order);
     tail_len [R] valid tokens in each request's LAST local slot.
+    ``backend``: "pallas" (kernel; interpret mode off-TPU) or "jnp" (pure
+    gather fallback); None picks pallas on TPU and jnp elsewhere.
     Returns (o [R,H,D] f32 unnormalized, m [R,H] f32, l [R,H] f32).
     """
     R, H, D = q.shape
     if scale is None:
         scale = D ** -0.5
+    if backend is None:
+        backend = "pallas" if (_on_tpu() or interpret is not None) else "jnp"
+    if backend == "jnp":
+        return paged_micro_attention_jnp(q, pool_k, pool_v,
+                                         table.astype(jnp.int32),
+                                         tail_len.astype(jnp.int32),
+                                         scale=scale)
     if interpret is None:
         interpret = not _on_tpu()
     nblk = jnp.sum(table >= 0, axis=1).astype(jnp.int32)

@@ -1,18 +1,27 @@
-"""Prefill-into-cache and the distributed decode step (dense/moe).
+"""Prefill-into-cache and the paged / distributed decode steps (dense/moe).
 
 ``prefill`` runs the full-sequence forward while capturing per-layer KV
 (and recurrent states) into a ``DecodeState`` so generation can continue
-token-by-token. ``decode_step_dist`` is the DistAttention-aware decode:
-each request's KV may be split between a *local* ring cache (the tail
-span ``[start, len)``) and *remote* spans held by creditor instances; the
-attention result is the LSE-merge of the local partial and the remote
-partial (paper Eq. 3). The cluster runtime (``repro.serving.cluster``)
-feeds the remote KV in; the mesh version uses collectives instead
-(``repro.serving.sharded_step``).
+token-by-token.
+
+``decode_step_paged`` is the serving data path: every request's KV lives
+in fixed-shape block pools (``pool_k/pool_v: [L, NB, bs, K, hd]`` per
+rank) and is addressed purely through block tables. One local pool is
+updated in place (the new token's KV is scattered into its tail block);
+any number of remote (creditor) pools are read-only. Each rank's paged
+MicroAttention partial (paper Eq. 2) is LSE-merged (Eq. 3) — tables are
+bucketed by the caller so the step compiles O(#buckets * #rank-counts)
+times, never per sequence length.
+
+``decode_step_dist`` is the older dense-span formulation (local ring +
+concatenated remote arrays); it remains as an equivalence oracle for the
+paged path and for the mesh/collective version in
+``repro.serving.sharded_step``.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+import functools
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +163,26 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, *,
 # ===================================================================== #
 # Slot management (engine batches individual prefills into fixed slots)
 # ===================================================================== #
+def repack_ring(state: DecodeState, new_maxlen: int,
+                n_keep: Optional[int] = None) -> DecodeState:
+    """Convert a full prefill cache (max_len = T, identity layout) into a
+    ring cache of ``new_maxlen`` holding the tail ``n_keep`` tokens.
+
+    Only the non-pooled serving path (hybrid/ssm engines) uses this; the
+    dense/moe path writes prefill KV straight into the block pool.
+    """
+    T = int(state.lens[0])
+    n = min(T, new_maxlen if n_keep is None else n_keep)
+    k = state.kv_k[:, :, T - n:T]
+    v = state.kv_v[:, :, T - n:T]
+    slots = (T - n + jnp.arange(n)) % new_maxlen
+    L, B = state.kv_k.shape[:2]
+    shape = (L, B, new_maxlen) + state.kv_k.shape[3:]
+    nk = jnp.zeros(shape, state.kv_k.dtype).at[:, :, slots].set(k)
+    nv = jnp.zeros(shape, state.kv_v.dtype).at[:, :, slots].set(v)
+    return DecodeState(nk, nv, state.lens, state.rec)
+
+
 def batch_axis_map(cfg: ModelConfig):
     """Batch-axis index for each DecodeState field's arrays."""
     if cfg.family in ("dense", "moe"):
@@ -286,3 +315,137 @@ def decode_step_dist(params, cfg: ModelConfig, state: DecodeState,
 
     logits = unembed(params, cfg, x[:, 0])
     return logits, DecodeState(ck, cv, lens + 1, None)
+
+
+# ===================================================================== #
+# Paged decode step (dense/moe): KV pool + block tables, fixed shapes
+# ===================================================================== #
+# Incremented once per trace of the jitted paged step; serving tests use
+# it to assert the recompile count is bounded by the table buckets and
+# rank counts, never by remote-span length.
+_PAGED_TRACE_COUNT = 0
+
+
+def paged_trace_count() -> int:
+    return _PAGED_TRACE_COUNT
+
+
+def _paged_partial(q, pk, pv, table, tail, backend):
+    """One rank's MicroAttention partial over its pool (paper Eq. 2)."""
+    if backend == "pallas":
+        from repro.kernels.ops import paged_micro_attention
+        return paged_micro_attention(q, pk, pv, table, tail,
+                                     backend="pallas")
+    from repro.kernels.ops import paged_micro_attention_jnp
+    return paged_micro_attention_jnp(q, pk, pv, table, tail)
+
+
+def _paged_attn_decode(lp, x, lens, pk, pv, rks, rvs, tables, tails,
+                       write_block, write_off, cfg, backend):
+    """Paged DistAttention for one layer: write tail token, merge ranks.
+
+    pk/pv: [NB, bs, K, hd] — the LOCAL pool's layer slice (updated);
+    rks/rvs: tuples of remote layer slices (read-only);
+    tables: [P, B, MB] block tables (rank 0 = local); tails: [P, B].
+    """
+    B = x.shape[0]
+    q, k, v = qkv_project(lp, x, lens[:, None], cfg)
+    ql = q[:, 0]
+    # Append this step's KV into each request's tail block. Inactive
+    # slots carry an out-of-range block index; mode="drop" skips them.
+    pk = pk.at[write_block, write_off].set(k[:, 0].astype(pk.dtype),
+                                           mode="drop")
+    pv = pv.at[write_block, write_off].set(v[:, 0].astype(pv.dtype),
+                                           mode="drop")
+    part = _paged_partial(ql, pk, pv, tables[0], tails[0], backend)
+    for p, (rk, rv) in enumerate(zip(rks, rvs), start=1):
+        part = combine(part, _paged_partial(ql, rk, rv, tables[p],
+                                            tails[p], backend))
+    out = finalize(part[0], part[2])
+    out = out.reshape(B, 1, -1).astype(x.dtype) @ lp["wo"]
+    return out, pk, pv
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _decode_step_paged_jit(params, tokens, lens, pool_k, pool_v,
+                           remote_k, remote_v, tables, tails,
+                           write_block, write_off, *, cfg, backend):
+    global _PAGED_TRACE_COUNT
+    _PAGED_TRACE_COUNT += 1
+    x = embed_tokens(params, cfg, tokens[:, None], None,
+                     positions=lens[:, None])
+
+    def make_body(moe):
+        def body(x, xs):
+            lp, pk, pv, rks, rvs = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            out, pk, pv = _paged_attn_decode(
+                lp["attn"], h, lens, pk, pv, rks, rvs, tables, tails,
+                write_block, write_off, cfg, backend)
+            x = x + out
+            h = apply_norm(lp["ln2"], x, cfg)
+            if moe:
+                x = x + apply_moe(lp["moe"], h, cfg, capacity_factor=-1.0)
+            else:
+                x = x + apply_ffn(lp["ffn"], h, cfg)
+            return x, (pk, pv)
+        return body
+
+    if cfg.family == "dense":
+        x, (pk, pv) = jax.lax.scan(
+            make_body(False), x,
+            (params["layers"], pool_k, pool_v, remote_k, remote_v))
+    else:
+        nd = cfg.first_k_dense
+        if nd:
+            x, (pkd, pvd) = jax.lax.scan(
+                make_body(False), x,
+                (params["dense_layers"], pool_k[:nd], pool_v[:nd],
+                 tuple(a[:nd] for a in remote_k),
+                 tuple(a[:nd] for a in remote_v)))
+        x, (pkm, pvm) = jax.lax.scan(
+            make_body(True), x,
+            (params["moe_layers"], pool_k[nd:], pool_v[nd:],
+             tuple(a[nd:] for a in remote_k),
+             tuple(a[nd:] for a in remote_v)))
+        pk = jnp.concatenate([pkd, pkm], 0) if nd else pkm
+        pv = jnp.concatenate([pvd, pvm], 0) if nd else pvm
+
+    logits = unembed(params, cfg, x[:, 0])
+    return logits, pk, pv
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, lens,
+                      pool_k: jax.Array, pool_v: jax.Array,
+                      tables, tails, write_block, write_off,
+                      remote_pools: Sequence[Tuple[jax.Array, jax.Array]]
+                      = (), *, backend: Optional[str] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-shape paged DistAttention decode (dense/moe serving path).
+
+    tokens/lens: [B] (lens = absolute position of the new token);
+    pool_k/pool_v: [L, NB, bs, K, hd] — the owner rank's pool (returned
+    updated; KV for the new token is written into the request's tail
+    block before attention so the token attends to itself);
+    tables/tails: [P, B, MB] / [P, B] from ``build_local_tables`` over
+    (owner pool, *creditor pools) with a bucketed MB;
+    write_block/write_off: [B] target (block id, offset) of the new
+    token in the OWNER pool; inactive slots use block id NB (dropped);
+    remote_pools: creditor [L, NB_p, bs, K, hd] pool pairs, read-only.
+
+    All shapes are independent of context length: growing a request — or
+    migrating its blocks between ranks — only edits table/pool *contents*,
+    so the step retraces only when the table bucket or rank count changes.
+    Returns (logits [B, V], new_pool_k, new_pool_v).
+    """
+    assert cfg.family in ("dense", "moe"), "only attention archs pool KV"
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    remote_k = tuple(pk for pk, _ in remote_pools)
+    remote_v = tuple(pv for _, pv in remote_pools)
+    return _decode_step_paged_jit(
+        params, jnp.asarray(tokens, jnp.int32), jnp.asarray(lens, jnp.int32),
+        pool_k, pool_v, remote_k, remote_v,
+        jnp.asarray(tables, jnp.int32), jnp.asarray(tails, jnp.int32),
+        jnp.asarray(write_block, jnp.int32),
+        jnp.asarray(write_off, jnp.int32), cfg=cfg, backend=backend)

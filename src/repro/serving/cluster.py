@@ -3,10 +3,15 @@
 In-process realization of the paper's Fig. 3/8 system: every instance is
 an ``InstanceEngine`` with an ``RManager``; a ``GManager`` ingests
 heartbeats, plans Algorithm-1 moves, and the runtime executes them with
-the try_move reservation protocol. Requests whose KV outgrows (or is
-proactively moved off) their owner instance decode via DistAttention —
-the creditor's MicroAttention is evaluated inside the owner's
-``decode_step_dist`` merge, and only query/merge-size traffic is charged.
+the try_move reservation protocol. All serving KV lives in the engines'
+device-resident block pools, so every movement here — the prefill-time
+prefix spill and both reactive and Algorithm-1 scheduled moves — is pool
+row copies plus table edits: read the oldest blocks out of the debtor's
+pool, write them into blocks reserved in the creditor's pool, free the
+debtor's blocks. Requests whose KV spans instances decode via the
+owner's multi-rank ``decode_step_paged`` merge (the creditor pools are
+read directly, block-table addressed); only query/merge-size traffic is
+charged per (request, creditor) span.
 
 Fault tolerance: on heartbeat timeout the instance is dropped; every
 affected request is re-enqueued for re-prefill on survivors (KV is
@@ -17,8 +22,6 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
-
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.serving.engine import InstanceEngine
@@ -47,6 +50,7 @@ class Cluster:
         }
         for eng in self.engines.values():
             eng.prefix_sink = self._make_prefix_sink(eng.inst_id)
+            eng.peers = self.engines      # shared: add_instance updates all
         perf = InstancePerfModel(cfg)
         self.gmanager = GManager(perf, block_size,
                                  heartbeat_timeout=heartbeat_timeout,
@@ -72,37 +76,46 @@ class Cluster:
     def _make_prefix_sink(self, src_id: int):
         """Place a too-long prompt's prefix KV on creditors (prefill spill).
 
-        May split the span across several creditors; uses the same
-        try_move reservation as scheduled moves."""
+        The owner block-aligns the spilled span, so every creditor
+        receives whole blocks: reserve via try_move, commit, write the
+        pool rows. May split the span across several creditors."""
         def sink(req: Request, k, v):
-            n = k.shape[2]
-            placed = []
+            n = k.shape[2]                    # always a block multiple
+            bs = self.block_size
+            placed = []                       # [(dst_inst, n_tokens)]
+
+            def rollback():
+                for d, _ in placed:
+                    self.engines[d].drop_hosted(req.req_id)
+
             off = 0
             while off < n:
                 dst = self._pick_creditor(exclude=src_id)
                 if dst is None:
-                    # Roll back partial placement.
-                    for d, kk, vv in placed:
-                        self.engines[d].drop_hosted(req.req_id)
+                    rollback()
                     return None
                 eng = self.engines[dst]
-                free = eng.rmanager.pool.alloc.free_count
-                take_blocks = min(free, -(-(n - off) // self.block_size))
-                take = min(n - off, take_blocks * self.block_size)
-                if take <= 0:
+                nb = min(eng.rmanager.pool.alloc.free_count,
+                         (n - off) // bs)
+                if nb <= 0 or not eng.rmanager.try_move_kvcache(req.req_id,
+                                                                nb):
+                    rollback()
                     return None
-                nb = -(-take // self.block_size)
-                if not eng.rmanager.try_move_kvcache(req.req_id, nb):
-                    return None
-                eng.rmanager.commit_move_in(req.req_id, nb, at_front=False)
-                kk, vv = k[:, :, off:off + take], v[:, :, off:off + take]
-                eng.host_kv(req.req_id, kk, vv)
-                placed.append((dst, kk, vv))
+                blocks = eng.rmanager.commit_move_in(req.req_id, nb,
+                                                     at_front=False)
+                take = nb * bs
+                eng.host_kv(req.req_id, blocks,
+                            k[:, :, off:off + take], v[:, :, off:off + take])
+                placed.append((dst, take))
                 off += take
             return placed
         return sink
 
     def _execute_move(self, mv: MoveKVCache) -> MoveResult:
+        """Move the oldest blocks of a request to a creditor.
+
+        Pure pool-row copies + table edits: no dense KV arrays are ever
+        materialized outside the two pools."""
         if mv.src_inst in self._dead or mv.dst_inst in self._dead:
             return MoveResult.REJECTED
         src = self.engines[mv.src_inst]
@@ -110,50 +123,48 @@ class Cluster:
         req = self.requests.get(mv.req_id)
         if req is None or req.done or req.slot is None:
             return MoveResult.GONE
-        # Clamp to what the ring can actually give up (keep >=1 block).
-        slot = req.slot
-        local_tokens = req.length - int(src.start[slot])
-        movable = max(0, local_tokens - self.block_size)
-        n_tokens = min(mv.num_blocks * self.block_size, movable)
-        n_blocks = n_tokens // self.block_size
+        # Clamp to the full blocks the owner can give up (keep >= 1).
+        bs = self.block_size
+        local_tokens = src.local_tokens(req)
+        n_blocks = min(mv.num_blocks, max(0, local_tokens - bs) // bs)
         if n_blocks <= 0:
             return MoveResult.GONE
-        n_tokens = n_blocks * self.block_size
+        n_tokens = n_blocks * bs
         # Paper Fig. 8 step 4: FCFS reservation on the destination.
         if not dst.rmanager.try_move_kvcache(mv.req_id, n_blocks):
             return MoveResult.REJECTED
-        k, v = src.extract_prefix_kv(req, n_tokens)
-        dst.rmanager.commit_move_in(mv.req_id, n_blocks, at_front=False)
-        dst.host_kv(mv.req_id, k, v)
-        src.advance_start(req, n_tokens)
-        src.remote.setdefault(mv.req_id, []).append((mv.dst_inst, k, v))
+        k, v = src.extract_prefix_kv(req, n_blocks)
+        blocks = dst.rmanager.commit_move_in(mv.req_id, n_blocks,
+                                             at_front=False)
+        dst.host_kv(mv.req_id, blocks, k, v)
+        src.rmanager.move_out_prefix(mv.req_id, n_blocks)
+        insts = src.remote_insts.setdefault(mv.req_id, [])
+        if mv.dst_inst not in insts:
+            insts.append(mv.dst_inst)
         nbytes = int(k.size + v.size) * k.dtype.itemsize
         src.stats.kv_moved += nbytes
         src.stats.tokens_moved_steps.append(n_tokens)
         return MoveResult.OK
 
     def _reactive_moves(self) -> None:
-        """Ship overflow before a ring write would evict live KV."""
+        """Ship prefix blocks before a request breaches its local quota."""
         for eng in self.engines.values():
             if eng.inst_id in self._dead or not eng._can_pool:
                 continue
             for req in eng.running:
-                if eng.ring_free_tokens(req) <= 1:
+                if eng.local_free_tokens(req) <= 1:
                     dst = self._pick_creditor(exclude=eng.inst_id)
                     n_blocks = max(1, self.move_chunk // self.block_size)
                     ok = (dst is not None and
                           self._execute_move(MoveKVCache(
                               req.req_id, n_blocks, eng.inst_id, dst))
                           == MoveResult.OK)
-                    if not ok and eng.ring_free_tokens(req) <= 0:
-                        # Next write would evict live KV: the cluster is
-                        # out of pooled memory -> fail loudly, never
-                        # corrupt (paper: reject when pool exhausted).
-                        req.state = RequestState.FAILED
-                        eng.slots[req.slot] = None
-                        eng.start[req.slot] = 0
-                        req.slot = None
-                        eng.rmanager.release_request(req.req_id)
+                    if not ok and eng.local_free_tokens(req) <= 0:
+                        # The next append would breach the quota and no
+                        # creditor can absorb blocks: the cluster is out
+                        # of pooled memory -> fail loudly, never corrupt
+                        # (paper: reject when pool exhausted).
+                        eng._fail(req)
 
     def _pick_creditor(self, exclude: int) -> Optional[int]:
         best, best_free = None, 0
@@ -194,16 +205,18 @@ class Cluster:
                 if i in self._dead:
                     continue
                 for req in list(e.running):
-                    spans = e.remote.get(req.req_id)
-                    if spans and any(inst == d for inst, _, _ in spans):
+                    if d in e.remote_insts.get(req.req_id, ()):
                         req.state = RequestState.WAITING
                         req.prompt = req.prompt + req.output
                         req.output = []
                         e.slots[req.slot] = None
-                        e.start[req.slot] = 0
                         req.slot = None
                         e.rmanager.release_request(req.req_id)
-                        e.remote.pop(req.req_id, None)
+                        e.remote_insts.pop(req.req_id, None)
+                        # Reclaim surviving creditor-hosted spans too.
+                        for j, ej in self.engines.items():
+                            if j not in self._dead:
+                                ej.drop_hosted(req.req_id)
                         self.submit(req)
             self.gmanager.deregister(d)
 
@@ -217,6 +230,7 @@ class Cluster:
             pool_blocks=ref.rmanager.pool.alloc.num_blocks,
             block_size=self.block_size, inst_id=new_id)
         self.engines[new_id].prefix_sink = self._make_prefix_sink(new_id)
+        self.engines[new_id].peers = self.engines
         self._need_full_hb.add(new_id)
         return new_id
 
@@ -254,11 +268,11 @@ class Cluster:
             if i in self._dead:
                 continue
             made += eng.step()
-        # Free creditor-hosted KV of finished requests.
+        # Free creditor-hosted blocks of finished requests (metadata only).
         for rid, req in self.requests.items():
             if req.done:
                 for eng in self.engines.values():
-                    if rid in eng.hosted:
+                    if eng.rmanager.is_hosting(rid):
                         eng.drop_hosted(rid)
         return made
 

@@ -1,11 +1,29 @@
-"""Single-instance serving engine: continuous batching over fixed slots.
+"""Single-instance serving engine: continuous batching over a paged pool.
 
 ORCA-style iteration-level scheduling: each ``step()`` admits waiting
 requests into free slots (prefill), then runs ONE decode iteration for
-all running slots. The local KV lives in a ring cache of ``max_local_len``
-tokens per slot; when a request outgrows it (or the scheduler says so)
-the overflow prefix is shipped to creditor instances and decoding
-continues with ``decode_step_dist`` — the DistAttention path.
+all running slots. For poolable families (dense/moe) ALL serving KV
+bytes live in the instance's device-resident block pool
+``pool_k/pool_v: [L, num_blocks, block_size, K, hd]``, managed by the
+``RManager``'s block allocator and addressed only through block tables:
+
+  * prefill admission writes the local tail of the prompt's KV into
+    freshly allocated blocks (the overflow prefix is spilled to creditor
+    instances' pools via ``prefix_sink``),
+  * each decode step appends the new token's KV into the request's tail
+    block inside the jitted ``decode_step_paged``,
+  * creditor-hosted spans are just blocks owned by ``req_id`` in the
+    creditor's pool (``host_kv`` writes the rows; dropping them is a
+    metadata release),
+  * moving KV between instances copies pool rows and edits tables —
+    shapes never change, so the decode step never retraces from growth.
+
+``max_local_len`` survives as the per-request LOCAL QUOTA (the paper's
+instance-local budget): when a request's local span approaches it the
+cluster ships prefix blocks to a creditor and decoding continues with
+the multi-rank paged step. Non-attention families (hybrid/ssm) keep the
+dense ``DecodeState`` path — their recurrent state is O(1) per request
+and never pools.
 """
 from __future__ import annotations
 
@@ -19,25 +37,12 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import DecodeState, decode_step, init_decode_state
-from repro.models.prefill import decode_step_dist, prefill, write_slot
+from repro.models.prefill import (decode_step_paged, prefill, repack_ring,
+                                  write_slot)
+from repro.serving.kvpool import (build_local_tables, read_pool_rows,
+                                  table_bucket, write_pool_rows)
 from repro.serving.request import Request, RequestState
 from repro.serving.rmanager import RManager
-
-
-def repack_ring(state: DecodeState, new_maxlen: int,
-                n_keep: Optional[int] = None) -> DecodeState:
-    """Convert a full prefill cache (max_len = T, identity layout) into a
-    ring cache of ``new_maxlen`` holding the tail ``n_keep`` tokens."""
-    T = int(state.lens[0])
-    n = min(T, new_maxlen if n_keep is None else n_keep)
-    k = state.kv_k[:, :, T - n:T]
-    v = state.kv_v[:, :, T - n:T]
-    slots = (T - n + np.arange(n)) % new_maxlen
-    L, B = state.kv_k.shape[:2]
-    shape = (L, B, new_maxlen) + state.kv_k.shape[3:]
-    nk = jnp.zeros(shape, state.kv_k.dtype).at[:, :, slots].set(k)
-    nv = jnp.zeros(shape, state.kv_v.dtype).at[:, :, slots].set(v)
-    return DecodeState(nk, nv, state.lens, state.rec)
 
 
 @dataclass
@@ -46,6 +51,8 @@ class CommStats:
     kv_moved: int = 0            # KV block migration (overlapped)
     query_shipped: int = 0       # q + (o, m, l) merge traffic per step
     tokens_moved_steps: List[int] = field(default_factory=list)
+    host_gather_s: float = 0.0   # host-side table/step-input build time
+    decode_steps: int = 0
 
 
 class InstanceEngine:
@@ -62,20 +69,31 @@ class InstanceEngine:
         self.max_local_len = max_local_len
         self.block_size = block_size
         self.rmanager = RManager(inst_id, pool_blocks, block_size)
-        self.state = init_decode_state(cfg, max_batch, max_local_len)
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self.start = np.zeros(max_batch, np.int64)   # first local abs pos
         self.waiting: List[Request] = []
-        self.hosted: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
         self.stats = CommStats()
         self._key = jax.random.PRNGKey(1234 + inst_id)
         self._can_pool = cfg.family in ("dense", "moe")
-        # Remote spans per req_id: owner-side view (k, v arrays per
-        # creditor, concatenated lazily at step time).
-        self.remote: Dict[int, List[Tuple[int, jnp.ndarray, jnp.ndarray]]] \
-            = {}
+        if self._can_pool:
+            assert max_local_len >= 2 * block_size, \
+                "local quota must cover at least two blocks"
+            L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+            dt = jnp.dtype(cfg.dtype)
+            # THE serving KV store: every local or hosted byte lives here.
+            self.pool_k = jnp.zeros((L, pool_blocks, block_size, K, hd), dt)
+            self.pool_v = jnp.zeros((L, pool_blocks, block_size, K, hd), dt)
+            self.state: Optional[DecodeState] = None
+        else:
+            self.pool_k = self.pool_v = None
+            self.state = init_decode_state(cfg, max_batch, max_local_len)
+        # Owner-side placement metadata: req_id -> creditor inst ids
+        # hosting prefix spans (the KV itself is in THEIR pools).
+        self.remote_insts: Dict[int, List[int]] = {}
+        # Cluster-installed peer lookup (inst_id -> InstanceEngine) so the
+        # decode step can read creditor pools directly.
+        self.peers: Dict[int, "InstanceEngine"] = {}
         # Cluster-installed callback: place an overflowing prefill prefix
-        # on creditors. sink(req, k, v) -> list[(dst_inst, k, v)] | None.
+        # on creditors. sink(req, k, v) -> list[(dst_inst, n_tokens)] | None.
         self.prefix_sink: Optional[Callable] = None
 
     # ----------------------------------------------------------------- #
@@ -106,14 +124,18 @@ class InstanceEngine:
             return False
         req = self.waiting[0]
         T = len(req.prompt)
-        # Admit with one block of ring headroom so the first decode writes
-        # never evict live KV before a reactive move can run.
-        cap = self.max_local_len - self.block_size
-        n_local = min(T, cap)
-        need_blocks = -(-n_local // self.block_size)
+        bs = self.block_size
+        # Admit with one block of quota headroom so the first decode
+        # appends never breach the local budget before a reactive move
+        # can run. The spilled prefix is block-aligned so creditor spans
+        # are always whole blocks.
+        cap = self.max_local_len - bs
+        n_over = 0 if T <= cap else -(-(T - cap) // bs) * bs
+        n_local = T - n_over
+        need_blocks = -(-n_local // bs)
         if self.rmanager.pool.alloc.free_count < need_blocks:
             return False
-        if T > cap and (not self._can_pool or self.prefix_sink is None):
+        if n_over and (not self._can_pool or self.prefix_sink is None):
             req.state = RequestState.FAILED      # cannot span: no KV pool
             self.waiting.pop(0)
             return True
@@ -122,27 +144,37 @@ class InstanceEngine:
         tokens = jnp.asarray([req.prompt], jnp.int32)
         logits, full_state = prefill(self.params, self.cfg, tokens,
                                      max_len=T)
-        if T > cap:
-            # Ship the overflow prefix to creditors before decoding starts
-            # (the paper's prefill-time spill).
-            n_over = T - n_local
+        if n_over:
+            # Ship the overflow prefix to creditors before decoding
+            # starts (the paper's prefill-time spill).
             spans = self.prefix_sink(req,
                                      full_state.kv_k[:, :, :n_over],
                                      full_state.kv_v[:, :, :n_over])
             if spans is None:                    # cluster-wide OOM
                 req.state = RequestState.FAILED
                 return True
-            self.remote[req.req_id] = list(spans)
-            nbytes = sum(int(k.size + v.size) * k.dtype.itemsize
-                         for _, k, v in spans)
-            self.stats.kv_moved += nbytes
-            self.start[slot] = n_over
+            insts = []
+            for dst, _ in spans:
+                if dst not in insts:
+                    insts.append(dst)
+            self.remote_insts[req.req_id] = insts
+            itemsize = jnp.dtype(self.cfg.dtype).itemsize
+            self.stats.kv_moved += int(
+                2 * full_state.kv_k[:, :, :n_over].size) * itemsize
+        if self._can_pool:
+            self.rmanager.pool.append_tokens(req.req_id, n_local)
+            blocks = self.rmanager.pool.requests[req.req_id].blocks
+            self.pool_k = write_pool_rows(self.pool_k, blocks,
+                                          full_state.kv_k[:, 0, n_over:],
+                                          bs)
+            self.pool_v = write_pool_rows(self.pool_v, blocks,
+                                          full_state.kv_v[:, 0, n_over:],
+                                          bs)
         else:
-            self.start[slot] = 0
-        req_state = repack_ring(full_state, self.max_local_len,
-                                n_keep=n_local)
-        self.state = write_slot(self.state, slot, req_state, self.cfg)
-        self.rmanager.pool.append_tokens(req.req_id, n_local)
+            req_state = repack_ring(full_state, self.max_local_len,
+                                    n_keep=min(n_local, self.max_local_len))
+            self.state = write_slot(self.state, slot, req_state, self.cfg)
+            self.rmanager.pool.append_tokens(req.req_id, n_local)
         self.rmanager.set_owner(req.req_id, True)
         req.slot = slot
         req.state = RequestState.RUNNING
@@ -167,119 +199,136 @@ class InstanceEngine:
     def _finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
         req.finish_time = time.monotonic()
+        self._release_slot(req)
+
+    def _fail(self, req: Request) -> None:
+        req.state = RequestState.FAILED
+        self._release_slot(req)
+
+    def _release_slot(self, req: Request) -> None:
         if req.slot is not None:
             self.slots[req.slot] = None
-            self.start[req.slot] = 0
             req.slot = None
         self.rmanager.release_request(req.req_id)
-        self.remote.pop(req.req_id, None)
+        self.remote_insts.pop(req.req_id, None)
 
     # ----------------------------------------------------------------- #
-    def _gather_remote(self, reqs: List[Optional[Request]]):
-        """Build padded [L, B, S_r, K, hd] remote arrays for this step."""
-        cfg = self.cfg
-        L = self.state.kv_k.shape[0]
-        K, hd = cfg.num_kv_heads, cfg.head_dim
-        spans = []
-        for r in reqs:
-            if r is None or r.req_id not in self.remote:
-                spans.append(None)
+    def _step_paged(self) -> Optional[jnp.ndarray]:
+        """One decode iteration over the pool path. Returns logits."""
+        pool = self.rmanager.pool
+        bs = self.block_size
+        t0 = time.perf_counter()
+        # Reserve this step's token in each request's tail block. A
+        # failed append means the pool is exhausted: reject loudly,
+        # never corrupt (paper: reject when pool exhausted).
+        for r in list(self.slots):
+            if r is not None and not pool.append_tokens(r.req_id, 1):
+                self._fail(r)
+        running = self.running
+        if not running:
+            return None
+        B, NB = self.max_batch, pool.alloc.num_blocks
+        tokens = np.zeros(B, np.int32)
+        lens = np.zeros(B, np.int32)
+        wblk = np.full(B, NB, np.int32)      # NB = out of range => dropped
+        woff = np.zeros(B, np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
                 continue
-            ks = [k for (_, k, _) in self.remote[r.req_id]]
-            vs = [v for (_, _, v) in self.remote[r.req_id]]
-            spans.append((jnp.concatenate(ks, 2), jnp.concatenate(vs, 2)))
-        S_r = max([s[0].shape[2] for s in spans if s is not None],
-                  default=0)
-        S_r = max(S_r, 1)
-        B = len(reqs)
-        rk = jnp.zeros((L, B, S_r, K, hd), jnp.dtype(cfg.dtype))
-        rv = jnp.zeros((L, B, S_r, K, hd), jnp.dtype(cfg.dtype))
-        rlen = np.zeros(B, np.int32)
-        for b, s in enumerate(spans):
-            if s is None:
-                continue
-            n = s[0].shape[2]
-            rk = rk.at[:, b, :n].set(s[0][:, 0])
-            rv = rv.at[:, b, :n].set(s[1][:, 0])
-            rlen[b] = n
-        return rk, rv, jnp.asarray(rlen)
+            tokens[i] = r.output[-1] if r.output else r.prompt[-1]
+            lens[i] = r.length - 1           # abs position of the new token
+            rb = pool.requests[r.req_id]
+            wblk[i] = rb.blocks[-1]
+            woff[i] = rb.tail_tokens - 1
+        insts = sorted({i for r in running
+                        for i in self.remote_insts.get(r.req_id, ())})
+        rank_pools = [pool] + [self.peers[i].rmanager.pool for i in insts]
+        req_ids = [r.req_id if r is not None else -1 for r in self.slots]
+        needed = max((len(p.requests[rid].blocks)
+                      for p in rank_pools for rid in req_ids
+                      if rid in p.requests), default=1)
+        tables, tails = build_local_tables(rank_pools, req_ids,
+                                           table_bucket(needed))
+        remote_pools = tuple((self.peers[i].pool_k, self.peers[i].pool_v)
+                             for i in insts)
+        self.stats.host_gather_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+
+        logits, self.pool_k, self.pool_v = decode_step_paged(
+            self.params, self.cfg, tokens, lens, self.pool_k, self.pool_v,
+            tables, tails, wblk, woff, remote_pools=remote_pools)
+
+        # Account the paper's per-step merge traffic — q + (o, m, l) —
+        # once per (request, creditor) span entry, matching the per-rank
+        # partial exchanges a real deployment would make.
+        H, hd = self.cfg.num_heads, self.cfg.head_dim
+        L = self.cfg.num_layers
+        entries = sum(len(self.remote_insts.get(r.req_id, ()))
+                      for r in running)
+        self.stats.query_shipped += int(
+            entries * L * (H * hd * 2 + H * hd * 4 + 2 * H * 4))
+        return logits
 
     def step(self) -> int:
         """Admit + one decode iteration. Returns #tokens generated."""
         while self._admit_one():
             pass
-        running = [r for r in self.slots if r is not None]
-        if not running:
+        if not self.running:
             self.rmanager.batch_size = 0
             return 0
 
-        tokens = np.zeros(self.max_batch, np.int32)
-        active = np.zeros(self.max_batch, bool)
-        for i, r in enumerate(self.slots):
-            if r is not None:
-                tokens[i] = r.output[-1] if r.output else r.prompt[-1]
-                active[i] = True
-        tokens = jnp.asarray(tokens)
-
-        any_remote = any(r is not None and r.req_id in self.remote
-                         for r in self.slots)
-        if any_remote:
-            rk, rv, rlen = self._gather_remote(self.slots)
-            start = jnp.asarray(self.start, jnp.int32)
-            logits, self.state = decode_step_dist(
-                self.params, self.cfg, self.state, tokens, start, rk, rv,
-                rlen)
-            # Account the paper's per-step merge traffic: q + (o, m, l).
-            H, hd = self.cfg.num_heads, self.cfg.head_dim
-            L = self.cfg.num_layers
-            n_span = sum(1 for r in self.slots
-                         if r is not None and r.req_id in self.remote)
-            self.stats.query_shipped += int(
-                n_span * L * (H * hd * 2 + H * hd * 4 + 2 * H * 4))
+        if self._can_pool:
+            logits = self._step_paged()
+            if logits is None:
+                self.rmanager.batch_size = 0
+                return 0
         else:
+            tokens = np.zeros(self.max_batch, np.int32)
+            for i, r in enumerate(self.slots):
+                if r is not None:
+                    tokens[i] = r.output[-1] if r.output else r.prompt[-1]
             logits, self.state = decode_step(self.params, self.cfg,
-                                             self.state, tokens)
+                                             self.state,
+                                             jnp.asarray(tokens))
+            for r in self.running:
+                self.rmanager.pool.append_tokens(r.req_id, 1)
 
         made = 0
         for i, r in enumerate(list(self.slots)):
             if r is None:
                 continue
-            self.rmanager.pool.append_tokens(r.req_id, 1)
             self._emit(r, logits[i])
             made += 1
         self.rmanager.batch_size = self.batch_size
         return made
 
     # --- KV movement (debtor side) ------------------------------------ #
-    def extract_prefix_kv(self, req: Request, n_tokens: int):
-        """Slice [start, start+n) KV out of the ring (before eviction)."""
-        slot = req.slot
-        s0 = int(self.start[slot])
-        maxlen = self.max_local_len
-        pos = s0 + np.arange(n_tokens)
-        ring = pos % maxlen
-        k = self.state.kv_k[:, slot:slot + 1, ring]
-        v = self.state.kv_v[:, slot:slot + 1, ring]
-        return k, v
+    def local_tokens(self, req: Request) -> int:
+        return self.rmanager.pool.tokens_of(req.req_id)
 
-    def ring_free_tokens(self, req: Request) -> int:
-        slot = req.slot
-        used = req.length - int(self.start[slot])
-        return self.max_local_len - used
+    def local_free_tokens(self, req: Request) -> int:
+        """Quota slots left AFTER the pending token's append."""
+        return self.max_local_len - self.local_tokens(req) - 1
 
-    def advance_start(self, req: Request, n_tokens: int) -> None:
-        self.start[req.slot] += n_tokens
-        n_blocks = n_tokens // self.block_size
-        if n_blocks:
-            self.rmanager.move_out_prefix(req.req_id, n_blocks)
+    def extract_prefix_kv(self, req: Request, n_blocks: int):
+        """Read the OLDEST n full blocks' rows out of the local pool."""
+        blocks = self.rmanager.pool.requests[req.req_id].blocks[:n_blocks]
+        k = read_pool_rows(self.pool_k, blocks, self.block_size)
+        v = read_pool_rows(self.pool_v, blocks, self.block_size)
+        return k[:, None], v[:, None]        # [L, 1, n*bs, K, hd]
 
     # --- creditor side -------------------------------------------------#
-    def host_kv(self, req_id: int, k, v) -> None:
-        if req_id in self.hosted:
-            k0, v0 = self.hosted[req_id]
-            k, v = jnp.concatenate([k0, k], 2), jnp.concatenate([v0, v], 2)
-        self.hosted[req_id] = (k, v)
+    def host_kv(self, req_id: int, blocks: List[int], k, v) -> None:
+        """Write an arriving span's rows into already-committed blocks.
+
+        k/v: [L, 1, n, K, hd] with n == len(blocks) * block_size (spans
+        are always whole blocks).
+        """
+        self.pool_k = write_pool_rows(self.pool_k, blocks, k[:, 0],
+                                      self.block_size)
+        self.pool_v = write_pool_rows(self.pool_v, blocks, v[:, 0],
+                                      self.block_size)
 
     def drop_hosted(self, req_id: int) -> None:
-        self.hosted.pop(req_id, None)
+        """Release a hosted span — pure metadata; rows are reused later."""
         self.rmanager.release_request(req_id)

@@ -1,17 +1,26 @@
-"""Paged KVCache block pool — host-side allocator + device-table builder.
+"""Paged KVCache block pool — allocator, device tables, pool-row writes.
 
-Each serving rank (an entry on the ``data`` — and optionally ``model`` —
-mesh axis) owns a fixed pool of ``num_blocks`` blocks of ``block_size``
-tokens. The allocator hands out block ids; per-request *local tables*
-(sequence-ordered local block ids, -1 padded) are what the paged
-MicroAttention kernel consumes. Placement across ranks is pure metadata:
-moving a block = copying pool rows + editing tables, never recompilation.
+Each serving rank (an ``InstanceEngine`` in the in-process cluster, or an
+entry on the ``data``/``model`` mesh axis) owns a fixed pool of
+``num_blocks`` blocks of ``block_size`` tokens. Since the pool refactor
+this is where ALL serving KV bytes live: each engine holds device tensors
+``pool_k/pool_v: [L, num_blocks, block_size, K, hd]``, and the host-side
+allocator here hands out the block ids that index them. Per-request
+*local tables* (sequence-ordered local block ids, -1 padded, built by
+``build_local_tables``) are what the paged MicroAttention step consumes.
+Placement across ranks is pure metadata: moving a block = copying pool
+rows (``read_pool_rows`` -> ``write_pool_rows``) + editing tables, never
+recompilation. Tables are padded to the bucketed widths returned by
+``table_bucket`` so the decode step compiles O(#buckets) times, not
+O(#sequence-lengths).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -151,6 +160,50 @@ class RankKVPool:
     @property
     def memory_utilization(self) -> float:
         return self.alloc.used_count / self.alloc.num_blocks
+
+
+TABLE_BUCKET_MIN = 8
+
+
+def table_bucket(n_blocks: int, lo: int = TABLE_BUCKET_MIN) -> int:
+    """Smallest power-of-two table width >= max(n_blocks, lo).
+
+    Bucketing the ``max_blocks`` dimension of the block tables keeps the
+    paged decode step's compile count bounded by the number of buckets
+    (log2 of the longest context) instead of the number of distinct
+    span lengths.
+    """
+    m = max(int(n_blocks), lo, 1)
+    return 1 << (m - 1).bit_length()
+
+
+def write_pool_rows(pool: jax.Array, block_ids: Sequence[int],
+                    rows: jax.Array, block_size: int) -> jax.Array:
+    """Write token rows into pool blocks (functional update).
+
+    pool: [L, NB, bs, K, hd]; rows: [L, n, K, hd] with
+    n <= len(block_ids) * block_size, filling ``block_ids`` in sequence
+    order from offset 0 (a partial final block is zero-padded; readers
+    mask it via the table's tail length).
+    """
+    L, n = rows.shape[:2]
+    nb = len(block_ids)
+    pad = nb * block_size - n
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (rows.ndim - 2)
+        rows = jnp.pad(rows, widths)
+    rows = rows.reshape((L, nb, block_size) + rows.shape[2:])
+    idx = jnp.asarray(list(block_ids), jnp.int32)
+    return pool.at[:, idx].set(rows.astype(pool.dtype))
+
+
+def read_pool_rows(pool: jax.Array, block_ids: Sequence[int],
+                   block_size: int) -> jax.Array:
+    """Gather full blocks out of a pool: [L, len(block_ids)*bs, K, hd]."""
+    idx = jnp.asarray(list(block_ids), jnp.int32)
+    rows = pool[:, idx]                       # [L, nb, bs, K, hd]
+    L = rows.shape[0]
+    return rows.reshape((L, len(block_ids) * block_size) + rows.shape[3:])
 
 
 def build_local_tables(pools: Sequence[RankKVPool], req_ids: Sequence[int],

@@ -2,8 +2,10 @@
 
 Owns the instance's block pool, answers try_move_kvcache reservations
 FCFS, emits delta heartbeats, and executes movement instructions. The
-actual KV bytes live with the instance engine; the rManager only manages
-metadata + reservations so a stale gManager plan can never corrupt state.
+actual KV bytes live in the engine's device pool tensors; every row of
+those tensors is addressed exclusively through the block ids this
+metadata hands out, so a stale gManager plan can never corrupt state —
+a reservation that never commits is just cancelled numbers.
 """
 from __future__ import annotations
 
@@ -79,6 +81,11 @@ class RManager:
         the number actually released."""
         popped = self.pool.pop_prefix_blocks(req_id, num_blocks)
         return len(popped)
+
+    def is_hosting(self, req_id: int) -> bool:
+        """True iff this rank holds blocks for a request it does NOT own
+        (i.e. it is a creditor for that request)."""
+        return req_id in self.pool.requests and req_id not in self._owned
 
     def release_request(self, req_id: int) -> None:
         self.pool.release(req_id)

@@ -2,6 +2,9 @@
 Algorithm-1 scheduler behaviour, heartbeat protocol."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
