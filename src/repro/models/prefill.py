@@ -2,7 +2,15 @@
 
 ``prefill`` runs the full-sequence forward while capturing per-layer KV
 (and recurrent states) into a ``DecodeState`` so generation can continue
-token-by-token.
+token-by-token. On the dense/moe SERVING path it is no longer the
+admission step: ``prefill_chunk_paged`` streams a prompt into the block
+pools chunk-by-chunk — each fixed-shape step runs the causal core over
+the chunk plus a paged MicroAttention partial over every already-written
+pool span (local + creditors), LSE-merges them, and scatters the chunk's
+KV rows straight into pre-reserved blocks. Peak admission memory is
+O(chunk + pool) and compile shapes never depend on prompt length;
+``prefill`` remains the hybrid/ssm admission path and the equivalence
+oracle for the chunked pipeline.
 
 ``decode_step_paged`` is the serving data path: every request's KV lives
 in fixed-shape block pools (``pool_k/pool_v: [L, NB, bs, K, hd]`` per
@@ -28,7 +36,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.online_softmax import (combine, finalize,
-                                       micro_attention_decode)
+                                       micro_attention_decode,
+                                       micro_attention_prefill)
 from repro.models.attention import apply_attention_train, make_causal_core, \
     qkv_project
 from repro.models.common import apply_ffn, apply_norm
@@ -340,6 +349,38 @@ def _paged_partial(q, pk, pv, table, tail, backend):
     return paged_micro_attention_jnp(q, pk, pv, table, tail)
 
 
+def _scan_dense_moe(params, cfg, x, pool_k, pool_v, remote_k, remote_v,
+                    make_body):
+    """Layer-stack scan shared by the paged decode and prefill steps.
+
+    ``make_body(moe)`` returns a scan body consuming
+    ``(x, (lp, pk, pv, rks, rvs))``; per-layer pool slices (and the
+    remote tuples) are split across the dense/moe sub-stacks and the
+    scan outputs re-concatenated along the layer axis.
+    """
+    if cfg.family == "dense":
+        return jax.lax.scan(make_body(False), x,
+                            (params["layers"], pool_k, pool_v,
+                             remote_k, remote_v))
+    nd = cfg.first_k_dense
+    ys_d = None
+    if nd:
+        x, ys_d = jax.lax.scan(
+            make_body(False), x,
+            (params["dense_layers"], pool_k[:nd], pool_v[:nd],
+             tuple(a[:nd] for a in remote_k),
+             tuple(a[:nd] for a in remote_v)))
+    x, ys_m = jax.lax.scan(
+        make_body(True), x,
+        (params["moe_layers"], pool_k[nd:], pool_v[nd:],
+         tuple(a[nd:] for a in remote_k),
+         tuple(a[nd:] for a in remote_v)))
+    if nd:
+        ys_m = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                            ys_d, ys_m)
+    return x, ys_m
+
+
 def _paged_attn_decode(lp, x, lens, pk, pv, rks, rvs, tables, tails,
                        write_block, write_off, cfg, backend):
     """Paged DistAttention for one layer: write tail token, merge ranks.
@@ -391,26 +432,8 @@ def _decode_step_paged_jit(params, tokens, lens, pool_k, pool_v,
             return x, (pk, pv)
         return body
 
-    if cfg.family == "dense":
-        x, (pk, pv) = jax.lax.scan(
-            make_body(False), x,
-            (params["layers"], pool_k, pool_v, remote_k, remote_v))
-    else:
-        nd = cfg.first_k_dense
-        if nd:
-            x, (pkd, pvd) = jax.lax.scan(
-                make_body(False), x,
-                (params["dense_layers"], pool_k[:nd], pool_v[:nd],
-                 tuple(a[:nd] for a in remote_k),
-                 tuple(a[:nd] for a in remote_v)))
-        x, (pkm, pvm) = jax.lax.scan(
-            make_body(True), x,
-            (params["moe_layers"], pool_k[nd:], pool_v[nd:],
-             tuple(a[nd:] for a in remote_k),
-             tuple(a[nd:] for a in remote_v)))
-        pk = jnp.concatenate([pkd, pkm], 0) if nd else pkm
-        pv = jnp.concatenate([pvd, pvm], 0) if nd else pvm
-
+    x, (pk, pv) = _scan_dense_moe(params, cfg, x, pool_k, pool_v,
+                                  remote_k, remote_v, make_body)
     logits = unembed(params, cfg, x[:, 0])
     return logits, pk, pv
 
@@ -448,4 +471,135 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, lens,
         pool_k, pool_v, remote_k, remote_v,
         jnp.asarray(tables, jnp.int32), jnp.asarray(tails, jnp.int32),
         jnp.asarray(write_block, jnp.int32),
+        jnp.asarray(write_off, jnp.int32), cfg=cfg, backend=backend)
+
+
+# ===================================================================== #
+# Chunked paged prefill (dense/moe): stream a prompt into block pools
+# ===================================================================== #
+_PREFILL_CHUNK_TRACE_COUNT = 0
+
+
+def prefill_chunk_trace_count() -> int:
+    return _PREFILL_CHUNK_TRACE_COUNT
+
+
+def _chunk_attn_paged(lp, x, positions, valid, pk, pv, rks, rvs,
+                      tables, tails, write_block, write_off, cfg, backend):
+    """One layer of the streaming-prefill step for one prompt chunk.
+
+    Every chunk query attends to (a) the tokens already streamed into the
+    pools — one paged MicroAttention partial per rank over ``tables``,
+    which address exactly the written prefix [0, t0) — and (b) the chunk
+    itself under the causal mask. Partials LSE-merge (paper Eq. 3), so
+    the result equals dense full-prefix attention. The chunk's KV rows
+    landing on THIS rank are scattered into the local pool before the
+    paged partial runs; the pre-chunk tables mask them out, so they are
+    seen only by the chunk-internal causal partial.
+    """
+    B, C = x.shape[:2]
+    q, k, v = qkv_project(lp, x, positions, cfg)
+    pk = pk.at[write_block, write_off].set(k[0].astype(pk.dtype),
+                                           mode="drop")
+    pv = pv.at[write_block, write_off].set(v[0].astype(pv.dtype),
+                                           mode="drop")
+    MB = tables.shape[2]
+
+    def rank_partial(p, rk, rv):
+        if backend == "pallas":
+            # Kernel path: R = C queries sharing one (broadcast) table;
+            # the kernel streams blocks through VMEM, nothing gathers.
+            tb = jnp.broadcast_to(tables[p], (C, MB))
+            tl = jnp.broadcast_to(tails[p], (C,))
+            return _paged_partial(q[0], rk, rv, tb, tl, backend)
+        # jnp path: all C queries share the rank's table, so gather the
+        # rank's prefix rows ONCE ([S, K, hd]) and run a shared-KV
+        # partial — transient stays O(prefix), never O(chunk x prefix).
+        from repro.core.distattn import (gather_local_kv,
+                                         local_mask_from_table)
+        k_r, v_r = gather_local_kv(rk, rv, tables[p])      # [1, S, K, hd]
+        valid_r = local_mask_from_table(tables[p], rk.shape[1], tails[p])
+        kv_pos = jnp.zeros_like(valid_r, jnp.int32)        # all < t0
+        o, m, l = micro_attention_prefill(q, k_r, v_r, positions, kv_pos,
+                                          valid_r)
+        return o[0], m[0], l[0]
+
+    part = rank_partial(0, pk, pv)
+    for p, (rk, rv) in enumerate(zip(rks, rvs), start=1):
+        part = combine(part, rank_partial(p, rk, rv))
+    o_c, m_c, l_c = micro_attention_prefill(q, k, v, positions, positions,
+                                            valid)
+    part = combine(part, (o_c[0], m_c[0], l_c[0]))
+    out = finalize(part[0], part[2])
+    out = out.reshape(B, C, -1).astype(x.dtype) @ lp["wo"]
+    return out, pk, pv, k[0], v[0]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+def _prefill_chunk_paged_jit(params, tokens, positions, valid, last_idx,
+                             pool_k, pool_v, remote_k, remote_v,
+                             tables, tails, write_block, write_off, *,
+                             cfg, backend):
+    global _PREFILL_CHUNK_TRACE_COUNT
+    _PREFILL_CHUNK_TRACE_COUNT += 1
+    x = embed_tokens(params, cfg, tokens, None, positions)
+
+    def make_body(moe):
+        def body(x, xs):
+            lp, pk, pv, rks, rvs = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            out, pk, pv, k, v = _chunk_attn_paged(
+                lp["attn"], h, positions, valid, pk, pv, rks, rvs,
+                tables, tails, write_block, write_off, cfg, backend)
+            x = x + out
+            h = apply_norm(lp["ln2"], x, cfg)
+            if moe:
+                x = x + apply_moe(lp["moe"], h, cfg, capacity_factor=-1.0)
+            else:
+                x = x + apply_ffn(lp["ffn"], h, cfg)
+            return x, (pk, pv, k, v)
+        return body
+
+    x, (pk, pv, ks, vs) = _scan_dense_moe(params, cfg, x, pool_k, pool_v,
+                                          remote_k, remote_v, make_body)
+    logits = unembed(params, cfg, jnp.take(x, last_idx, axis=1))
+    return logits, pk, pv, ks, vs
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, t0: int,
+                        n_valid: int, pool_k: jax.Array, pool_v: jax.Array,
+                        tables, tails, write_block, write_off,
+                        remote_pools: Sequence[Tuple[jax.Array, jax.Array]]
+                        = (), *, backend: Optional[str] = None):
+    """One fixed-shape streaming-prefill step over prompt chunk [t0, t0+C).
+
+    tokens: [C] chunk token ids (the final chunk is zero-padded; only the
+    first ``n_valid`` entries are real); pool_k/pool_v: the owner rank's
+    [L, NB, bs, K, hd] pool, returned updated with the chunk rows that
+    map locally; tables/tails: [P, 1, MB] / [P, 1] from ``prefix_tables``
+    addressing the already-written tokens [0, t0) on (owner,
+    *creditors); write_block/write_off: [C] OWNER-pool target of each
+    chunk token (block id NB for rows bound for a creditor or padding —
+    dropped); remote_pools: creditor pool pairs, read-only.
+
+    Every shape is a function of (C, P, MB bucket, pool dims) — never of
+    the prompt length — so admission compiles are bounded by chunk size
+    and peak extra device memory is O(chunk), not O(T). Returns
+    (logits [1, V] at the last valid chunk position, new_pool_k,
+    new_pool_v, k_chunk [L, C, K, hd], v_chunk) — the chunk KV export is
+    what the engine streams to creditor pools for prefix rows.
+    """
+    assert cfg.family in ("dense", "moe"), "only attention archs pool KV"
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    C = len(tokens)
+    positions = t0 + jnp.arange(C, dtype=jnp.int32)[None]
+    valid = (jnp.arange(C, dtype=jnp.int32) < n_valid)[None]
+    remote_k = tuple(pk for pk, _ in remote_pools)
+    remote_v = tuple(pv for _, pv in remote_pools)
+    return _prefill_chunk_paged_jit(
+        params, jnp.asarray(tokens, jnp.int32)[None], positions, valid,
+        jnp.asarray(n_valid - 1, jnp.int32), pool_k, pool_v,
+        remote_k, remote_v, jnp.asarray(tables, jnp.int32),
+        jnp.asarray(tails, jnp.int32), jnp.asarray(write_block, jnp.int32),
         jnp.asarray(write_off, jnp.int32), cfg=cfg, backend=backend)

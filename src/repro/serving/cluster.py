@@ -4,14 +4,24 @@ In-process realization of the paper's Fig. 3/8 system: every instance is
 an ``InstanceEngine`` with an ``RManager``; a ``GManager`` ingests
 heartbeats, plans Algorithm-1 moves, and the runtime executes them with
 the try_move reservation protocol. All serving KV lives in the engines'
-device-resident block pools, so every movement here — the prefill-time
-prefix spill and both reactive and Algorithm-1 scheduled moves — is pool
-row copies plus table edits: read the oldest blocks out of the debtor's
-pool, write them into blocks reserved in the creditor's pool, free the
-debtor's blocks. Requests whose KV spans instances decode via the
-owner's multi-rank ``decode_step_paged`` merge (the creditor pools are
-read directly, block-table addressed); only query/merge-size traffic is
-charged per (request, creditor) span.
+device-resident block pools, so every movement here is pool row copies
+plus table edits. Two movement protocols exist:
+
+  * **reserve-then-stream** (admission): a prompt whose prefix
+    overflows the owner's local quota gets its creditor blocks
+    committed BEFORE any prefill compute (``PrefixSink``; may stripe
+    the prefix across several creditors when no single one can hold
+    it). The owner's chunked paged prefill then streams each chunk's
+    creditor-bound KV rows into those blocks as they are computed — no
+    dense prefix array is ever materialized.
+  * **read-copy-free** (decode-time moves, reactive or Algorithm-1):
+    read the oldest blocks out of the debtor's pool, write them into
+    blocks reserved in the creditor's pool, free the debtor's blocks.
+
+Requests whose KV spans instances decode via the owner's multi-rank
+``decode_step_paged`` merge (the creditor pools are read directly,
+block-table addressed); only query/merge-size traffic is charged per
+(request, creditor) span.
 
 Fault tolerance: on heartbeat timeout the instance is dropped; every
 affected request is re-enqueued for re-prefill on survivors (KV is
@@ -21,14 +31,66 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
+from repro.serving.kvpool import rows_for_token_range
 from repro.serving.perfmodel import InstancePerfModel
 from repro.serving.protocol import MoveKVCache, MoveResult
 from repro.serving.request import Request, RequestState
+
+
+class PrefixSink:
+    """Reserve-then-stream placement of a prompt prefix on creditors.
+
+    Built before any prefill FLOPs are spent: every creditor block the
+    [0, n_tokens) prefix needs is already reserved (try_move, FCFS) and
+    committed, so admission can only fail while it is still free to
+    fail. The owner's chunk loop then calls ``write`` once per chunk to
+    scatter the creditor-bound KV rows into those blocks.
+    """
+
+    def __init__(self, cluster: "Cluster", req_id: int,
+                 spans: List[Tuple[int, int, List[int]]]):
+        self._cluster = cluster
+        self._req_id = req_id
+        self._spans = spans          # [(inst, start_token, block_ids)]
+        self._bs = cluster.block_size
+
+    @property
+    def rank_ids(self) -> List[int]:
+        """Creditor instance ids, deduplicated, in prefix order."""
+        out: List[int] = []
+        for d, _, _ in self._spans:
+            if d not in out:
+                out.append(d)
+        return out
+
+    def coverage(self, upto: int) -> Dict[int, int]:
+        """Tokens of the written prefix [0, upto) held per creditor."""
+        cov = {d: 0 for d in self.rank_ids}
+        for d, start, blocks in self._spans:
+            cov[d] += min(max(upto - start, 0), len(blocks) * self._bs)
+        return cov
+
+    def write(self, t0: int, k, v) -> None:
+        """Scatter global prefix rows [t0, t0 + n) into creditor pools.
+
+        k/v: [L, n, K, hd] — one prefill chunk's creditor-bound rows.
+        """
+        n = k.shape[1]
+        for d, start, blocks in self._spans:
+            lo = max(t0, start)
+            hi = min(t0 + n, start + len(blocks) * self._bs)
+            if lo >= hi:
+                continue
+            blk, off = rows_for_token_range(blocks, self._bs,
+                                            lo - start, hi - start)
+            self._cluster.engines[d].host_kv_rows(
+                self._req_id, blk, off,
+                k[:, lo - t0:hi - t0], v[:, lo - t0:hi - t0])
 
 
 class Cluster:
@@ -36,7 +98,7 @@ class Cluster:
                  max_batch: int = 8, max_local_len: int = 128,
                  pool_blocks: int = 64, block_size: int = 16,
                  move_chunk_tokens: int = 16, schedule_every: int = 4,
-                 heartbeat_timeout: float = 3.0):
+                 heartbeat_timeout: float = 3.0, prefill_chunk: int = 32):
         self.cfg = cfg
         self.block_size = block_size
         self.move_chunk = move_chunk_tokens
@@ -45,7 +107,8 @@ class Cluster:
             i: InstanceEngine(params, cfg, max_batch=max_batch,
                               max_local_len=max_local_len,
                               pool_blocks=pool_blocks,
-                              block_size=block_size, inst_id=i)
+                              block_size=block_size, inst_id=i,
+                              prefill_chunk=prefill_chunk)
             for i in range(n_instances)
         }
         for eng in self.engines.values():
@@ -60,6 +123,10 @@ class Cluster:
         self._step_count = 0
         self._dead: set = set()
         self._need_full_hb: set = set(self.engines)
+        # Req ids whose creditor-hosted spans still need releasing; fed
+        # by the engines' finished-event drains so each finished request
+        # is released exactly once (never a rescan of all history).
+        self._pending_release: set = set()
 
     # ----------------------------------------------------------------- #
     def submit(self, req: Request) -> None:
@@ -74,41 +141,40 @@ class Cluster:
 
     # --- movement ------------------------------------------------------ #
     def _make_prefix_sink(self, src_id: int):
-        """Place a too-long prompt's prefix KV on creditors (prefill spill).
+        """Reserve-then-stream prefix sink for streaming paged prefill.
 
-        The owner block-aligns the spilled span, so every creditor
-        receives whole blocks: reserve via try_move, commit, write the
-        pool rows. May split the span across several creditors."""
-        def sink(req: Request, k, v):
-            n = k.shape[2]                    # always a block multiple
+        ``sink(req, n_tokens)`` commits whole blocks covering the
+        block-aligned prefix [0, n_tokens) across one or more creditors
+        (striping when no single creditor can hold it) and returns the
+        ``PrefixSink`` the owner's chunk loop writes through — or None
+        when the cluster is out of pooled memory, with every partial
+        reservation rolled back and zero compute spent."""
+        def sink(req: Request, n_tokens: int) -> Optional[PrefixSink]:
             bs = self.block_size
-            placed = []                       # [(dst_inst, n_tokens)]
+            spans: List[Tuple[int, int, List[int]]] = []
 
             def rollback():
-                for d, _ in placed:
+                for d, _, _ in spans:
                     self.engines[d].drop_hosted(req.req_id)
 
             off = 0
-            while off < n:
+            while off < n_tokens:
                 dst = self._pick_creditor(exclude=src_id)
                 if dst is None:
                     rollback()
                     return None
                 eng = self.engines[dst]
                 nb = min(eng.rmanager.pool.alloc.free_count,
-                         (n - off) // bs)
+                         (n_tokens - off) // bs)
                 if nb <= 0 or not eng.rmanager.try_move_kvcache(req.req_id,
                                                                 nb):
                     rollback()
                     return None
                 blocks = eng.rmanager.commit_move_in(req.req_id, nb,
                                                      at_front=False)
-                take = nb * bs
-                eng.host_kv(req.req_id, blocks,
-                            k[:, :, off:off + take], v[:, :, off:off + take])
-                placed.append((dst, take))
-                off += take
-            return placed
+                spans.append((dst, off, blocks))
+                off += nb * bs
+            return PrefixSink(self, req.req_id, spans)
         return sink
 
     def _execute_move(self, mv: MoveKVCache) -> MoveResult:
@@ -228,7 +294,8 @@ class Cluster:
             params, self.cfg, max_batch=ref.max_batch,
             max_local_len=ref.max_local_len,
             pool_blocks=ref.rmanager.pool.alloc.num_blocks,
-            block_size=self.block_size, inst_id=new_id)
+            block_size=self.block_size, inst_id=new_id,
+            prefill_chunk=ref.prefill_chunk)
         self.engines[new_id].prefix_sink = self._make_prefix_sink(new_id)
         self.engines[new_id].peers = self.engines
         self._need_full_hb.add(new_id)
@@ -268,12 +335,16 @@ class Cluster:
             if i in self._dead:
                 continue
             made += eng.step()
-        # Free creditor-hosted blocks of finished requests (metadata only).
-        for rid, req in self.requests.items():
-            if req.done:
-                for eng in self.engines.values():
-                    if eng.rmanager.is_hosting(rid):
-                        eng.drop_hosted(rid)
+        # Free creditor-hosted blocks of requests that finished since the
+        # last step (metadata only). Engines report each finish once.
+        for i, eng in self.engines.items():
+            if i not in self._dead:
+                self._pending_release.update(eng.drain_finished())
+        for rid in self._pending_release:
+            for eng in self.engines.values():
+                if eng.rmanager.is_hosting(rid):
+                    eng.drop_hosted(rid)
+        self._pending_release.clear()
         return made
 
     # ----------------------------------------------------------------- #

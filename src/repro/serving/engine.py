@@ -7,14 +7,22 @@ bytes live in the instance's device-resident block pool
 ``pool_k/pool_v: [L, num_blocks, block_size, K, hd]``, managed by the
 ``RManager``'s block allocator and addressed only through block tables:
 
-  * prefill admission writes the local tail of the prompt's KV into
-    freshly allocated blocks (the overflow prefix is spilled to creditor
-    instances' pools via ``prefix_sink``),
+  * admission is STREAMING PAGED PREFILL: every block the prompt needs
+    is reserved up front (the local tail in this pool; the overflow
+    prefix committed on creditors through the reserve-then-stream
+    ``prefix_sink``), then ``prefill_chunk_paged`` streams the prompt in
+    fixed-shape chunks — chunk-internal causal attention plus paged
+    MicroAttention partials over the already-written spans, with each
+    chunk's KV rows scattered straight into the reserved blocks. No
+    dense ``[L, 1, T, K, hd]`` cache is ever materialized: peak
+    admission memory is O(chunk + pool) and a prompt can stripe its
+    prefix across several creditors at admission time,
   * each decode step appends the new token's KV into the request's tail
     block inside the jitted ``decode_step_paged``,
   * creditor-hosted spans are just blocks owned by ``req_id`` in the
-    creditor's pool (``host_kv`` writes the rows; dropping them is a
-    metadata release),
+    creditor's pool (``host_kv`` writes whole migrated blocks;
+    ``host_kv_rows`` takes the prefill stream's row-addressed writes;
+    dropping them is a metadata release),
   * moving KV between instances copies pool rows and edits tables —
     shapes never change, so the decode step never retraces from growth.
 
@@ -22,8 +30,8 @@ bytes live in the instance's device-resident block pool
 instance-local budget): when a request's local span approaches it the
 cluster ships prefix blocks to a creditor and decoding continues with
 the multi-rank paged step. Non-attention families (hybrid/ssm) keep the
-dense ``DecodeState`` path — their recurrent state is O(1) per request
-and never pools.
+dense ``prefill()`` + ``DecodeState`` path — their recurrent state is
+O(1) per request and never pools.
 """
 from __future__ import annotations
 
@@ -37,10 +45,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.model import DecodeState, decode_step, init_decode_state
-from repro.models.prefill import (decode_step_paged, prefill, repack_ring,
+from repro.models.prefill import (decode_step_paged, prefill,
+                                  prefill_chunk_paged, repack_ring,
                                   write_slot)
-from repro.serving.kvpool import (build_local_tables, read_pool_rows,
-                                  table_bucket, write_pool_rows)
+from repro.serving.kvpool import (build_local_tables, prefix_tables,
+                                  read_pool_rows, rows_for_token_range,
+                                  scatter_pool_rows, table_bucket,
+                                  write_pool_rows)
 from repro.serving.request import Request, RequestState
 from repro.serving.rmanager import RManager
 
@@ -53,6 +64,26 @@ class CommStats:
     tokens_moved_steps: List[int] = field(default_factory=list)
     host_gather_s: float = 0.0   # host-side table/step-input build time
     decode_steps: int = 0
+    # Peak bytes of prompt-KV STAGED in flight by admission — the arrays
+    # holding prompt KV outside the pools. Streaming admission stages one
+    # chunk's [L, C, K, hd] export; the dense path stages the whole
+    # [L, 1, T, K, hd] cache. (Per-layer attention workspace — scores,
+    # prefix reads — is common to both paths and not counted.)
+    admit_stage_bytes: int = 0
+
+
+@jax.jit
+def _sample_batch(key, logits, temps):
+    """Next token for EVERY slot in one device call (one readback/step).
+
+    logits [B, V], temps [B] -> [B] int32; temperature <= 0 is greedy.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temps > 0, temps, 1.0)
+    keys = jax.random.split(key, logits.shape[0])
+    sampled = jax.vmap(jax.random.categorical)(
+        keys, logits.astype(jnp.float32) / safe_t[:, None])
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
 
 
 class InstanceEngine:
@@ -61,18 +92,20 @@ class InstanceEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_local_len: int = 256, pool_blocks: int = 1024,
                  block_size: int = 16, inst_id: int = 0,
-                 capacity_factor: float = -1.0):
+                 capacity_factor: float = -1.0, prefill_chunk: int = 32):
         self.params = params
         self.cfg = cfg
         self.inst_id = inst_id
         self.max_batch = max_batch
         self.max_local_len = max_local_len
         self.block_size = block_size
+        self.prefill_chunk = prefill_chunk
         self.rmanager = RManager(inst_id, pool_blocks, block_size)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         self.stats = CommStats()
         self._key = jax.random.PRNGKey(1234 + inst_id)
+        self._finished_events: List[int] = []
         self._can_pool = cfg.family in ("dense", "moe")
         if self._can_pool:
             assert max_local_len >= 2 * block_size, \
@@ -92,8 +125,10 @@ class InstanceEngine:
         # Cluster-installed peer lookup (inst_id -> InstanceEngine) so the
         # decode step can read creditor pools directly.
         self.peers: Dict[int, "InstanceEngine"] = {}
-        # Cluster-installed callback: place an overflowing prefill prefix
-        # on creditors. sink(req, k, v) -> list[(dst_inst, n_tokens)] | None.
+        # Cluster-installed callback: commit creditor blocks for an
+        # overflowing prompt prefix BEFORE any prefill compute.
+        # sink(req, n_tokens) -> PrefixSink handle | None (cluster OOM);
+        # the chunk loop streams KV rows in through handle.write().
         self.prefix_sink: Optional[Callable] = None
 
     # ----------------------------------------------------------------- #
@@ -138,58 +173,139 @@ class InstanceEngine:
         if n_over and (not self._can_pool or self.prefix_sink is None):
             req.state = RequestState.FAILED      # cannot span: no KV pool
             self.waiting.pop(0)
+            self._finished_events.append(req.req_id)
             return True
         self.waiting.pop(0)
 
-        tokens = jnp.asarray([req.prompt], jnp.int32)
-        logits, full_state = prefill(self.params, self.cfg, tokens,
-                                     max_len=T)
-        if n_over:
-            # Ship the overflow prefix to creditors before decoding
-            # starts (the paper's prefill-time spill).
-            spans = self.prefix_sink(req,
-                                     full_state.kv_k[:, :, :n_over],
-                                     full_state.kv_v[:, :, :n_over])
-            if spans is None:                    # cluster-wide OOM
-                req.state = RequestState.FAILED
-                return True
-            insts = []
-            for dst, _ in spans:
-                if dst not in insts:
-                    insts.append(dst)
-            self.remote_insts[req.req_id] = insts
-            itemsize = jnp.dtype(self.cfg.dtype).itemsize
-            self.stats.kv_moved += int(
-                2 * full_state.kv_k[:, :, :n_over].size) * itemsize
         if self._can_pool:
-            self.rmanager.pool.append_tokens(req.req_id, n_local)
-            blocks = self.rmanager.pool.requests[req.req_id].blocks
-            self.pool_k = write_pool_rows(self.pool_k, blocks,
-                                          full_state.kv_k[:, 0, n_over:],
-                                          bs)
-            self.pool_v = write_pool_rows(self.pool_v, blocks,
-                                          full_state.kv_v[:, 0, n_over:],
-                                          bs)
+            logits = self._admit_streaming(req, n_over, n_local)
+            if logits is None:                   # cluster-wide OOM
+                req.state = RequestState.FAILED
+                self._finished_events.append(req.req_id)
+                return True
         else:
-            req_state = repack_ring(full_state, self.max_local_len,
-                                    n_keep=min(n_local, self.max_local_len))
-            self.state = write_slot(self.state, slot, req_state, self.cfg)
-            self.rmanager.pool.append_tokens(req.req_id, n_local)
+            logits = self._admit_dense(req, slot, T, n_local)
         self.rmanager.set_owner(req.req_id, True)
         req.slot = slot
         req.state = RequestState.RUNNING
         self.slots[slot] = req
-        # First generated token comes from the prefill logits.
-        self._emit(req, logits[0])
+        # First generated token comes from the final prefill logits.
+        self._emit(req, int(self._sample_tokens(logits, [req])[0]))
         return True
 
-    def _emit(self, req: Request, logits: jnp.ndarray) -> None:
-        if req.sampling.temperature <= 0.0:
-            tok = int(jnp.argmax(logits))
-        else:
-            self._key, sub = jax.random.split(self._key)
-            tok = int(jax.random.categorical(
-                sub, logits.astype(jnp.float32) / req.sampling.temperature))
+    def _admit_dense(self, req: Request, slot: int, T: int,
+                     n_local: int) -> jax.Array:
+        """Hybrid/ssm admission: dense prefill into a DecodeState slot."""
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        logits, full_state = prefill(self.params, self.cfg, tokens,
+                                     max_len=T)
+        if full_state.kv_k is not None:
+            self.stats.admit_stage_bytes = max(
+                self.stats.admit_stage_bytes,
+                int(2 * full_state.kv_k.size
+                    * full_state.kv_k.dtype.itemsize))
+        req_state = repack_ring(full_state, self.max_local_len,
+                                n_keep=min(n_local, self.max_local_len))
+        self.state = write_slot(self.state, slot, req_state, self.cfg)
+        self.rmanager.pool.append_tokens(req.req_id, n_local)
+        return logits
+
+    def _admit_streaming(self, req: Request, n_over: int,
+                         n_local: int) -> Optional[jax.Array]:
+        """Dense/moe admission: reserve every block, then stream chunks.
+
+        All placement decisions happen BEFORE any compute: creditor
+        blocks for the overflow prefix are committed via the
+        reserve-then-stream ``prefix_sink`` and the local tail's blocks
+        are allocated here, so a failed admission costs zero FLOPs.
+        Returns the final chunk's logits, or None on cluster-wide OOM.
+        """
+        rid = req.req_id
+        sink = None
+        if n_over:
+            sink = self.prefix_sink(req, n_over)
+            if sink is None:
+                return None
+        ok = self.rmanager.pool.append_tokens(rid, n_local)
+        assert ok, "free_count was checked before the pop"
+        logits = self._stream_prefill(req, n_over, n_local, sink)
+        if sink is not None:
+            self.remote_insts[rid] = list(sink.rank_ids)
+            L, K, hd = (self.cfg.num_layers, self.cfg.num_kv_heads,
+                        self.cfg.head_dim)
+            itemsize = jnp.dtype(self.cfg.dtype).itemsize
+            self.stats.kv_moved += int(2 * L * n_over * K * hd) * itemsize
+        return logits
+
+    def _stream_prefill(self, req: Request, n_over: int, n_local: int,
+                        sink) -> jax.Array:
+        """Drive ``prefill_chunk_paged`` over the prompt, O(chunk) peak.
+
+        Per chunk: local rows scatter into the pool inside the jitted
+        step; creditor-bound rows come back as the chunk KV export and
+        stream out through ``sink.write`` — the only transient arrays
+        are chunk-sized, never [T]-sized.
+        """
+        rid = req.req_id
+        T = len(req.prompt)
+        bs, C = self.block_size, self.prefill_chunk
+        pool = self.rmanager.pool
+        NB = pool.alloc.num_blocks
+        local_blocks = pool.requests[rid].blocks
+        cred_ids = list(sink.rank_ids) if sink is not None else []
+        rank_pools = [pool] + [self.peers[d].rmanager.pool
+                               for d in cred_ids]
+        logits = None
+        for t0 in range(0, T, C):
+            t1 = min(t0 + C, T)
+            n_valid = t1 - t0
+            toks = np.zeros(C, np.int32)
+            toks[:n_valid] = req.prompt[t0:t1]
+            # Owner-pool write target per chunk row; creditor-bound and
+            # padded rows carry block id NB (out of range => dropped).
+            wblk = np.full(C, NB, np.int32)
+            woff = np.zeros(C, np.int32)
+            lo = max(t0, n_over)
+            if lo < t1:
+                blk, off = rows_for_token_range(local_blocks, bs,
+                                                lo - n_over, t1 - n_over)
+                wblk[lo - t0:t1 - t0] = blk
+                woff[lo - t0:t1 - t0] = off
+            # Tables address exactly the already-written tokens [0, t0).
+            covered = [min(max(t0 - n_over, 0), n_local)]
+            if sink is not None:
+                cov = sink.coverage(min(t0, n_over))
+                covered += [cov[d] for d in cred_ids]
+            needed = max(1, max(-(-c // bs) for c in covered))
+            tables, tails = prefix_tables(rank_pools, rid, covered,
+                                          table_bucket(needed))
+            # Re-read creditor pools every chunk: sink writes rebind
+            # the peers' pool tensors between steps.
+            remote = tuple((self.peers[d].pool_k, self.peers[d].pool_v)
+                           for d in cred_ids)
+            logits, self.pool_k, self.pool_v, k_c, v_c = \
+                prefill_chunk_paged(
+                    self.params, self.cfg, toks, t0, n_valid,
+                    self.pool_k, self.pool_v, tables, tails, wblk, woff,
+                    remote_pools=remote)
+            if sink is not None and t0 < n_over:
+                hi = min(t1, n_over)
+                sink.write(t0, k_c[:, :hi - t0], v_c[:, :hi - t0])
+            self.stats.admit_stage_bytes = max(
+                self.stats.admit_stage_bytes,
+                int((k_c.size + v_c.size) * k_c.dtype.itemsize))
+        return logits
+
+    def _sample_tokens(self, logits, reqs) -> np.ndarray:
+        """Sampled tokens for a batch of slots: ONE device call + ONE
+        host readback (not one per slot per step)."""
+        temps = jnp.asarray(
+            [(r.sampling.temperature if r is not None else 0.0)
+             for r in reqs], jnp.float32)
+        self._key, sub = jax.random.split(self._key)
+        return np.asarray(_sample_batch(sub, logits, temps))
+
+    def _emit(self, req: Request, tok: int) -> None:
         req.output.append(tok)
         eos = req.sampling.eos_token
         if (len(req.output) >= req.sampling.max_new_tokens
@@ -211,6 +327,14 @@ class InstanceEngine:
             req.slot = None
         self.rmanager.release_request(req.req_id)
         self.remote_insts.pop(req.req_id, None)
+        self._finished_events.append(req.req_id)
+
+    def drain_finished(self) -> List[int]:
+        """Req ids finished/failed since the last drain, each reported
+        once — the cluster releases their creditor-hosted spans from
+        this instead of rescanning every request ever submitted."""
+        out, self._finished_events = self._finished_events, []
+        return out
 
     # ----------------------------------------------------------------- #
     def _step_paged(self) -> Optional[jnp.ndarray]:
@@ -294,10 +418,12 @@ class InstanceEngine:
                 self.rmanager.pool.append_tokens(r.req_id, 1)
 
         made = 0
-        for i, r in enumerate(list(self.slots)):
+        reqs = list(self.slots)
+        toks = self._sample_tokens(logits, reqs)
+        for r, tok in zip(reqs, toks):
             if r is None:
                 continue
-            self._emit(r, logits[i])
+            self._emit(r, int(tok))
             made += 1
         self.rmanager.batch_size = self.batch_size
         return made
@@ -328,6 +454,16 @@ class InstanceEngine:
                                       self.block_size)
         self.pool_v = write_pool_rows(self.pool_v, blocks, v[:, 0],
                                       self.block_size)
+
+    def host_kv_rows(self, req_id: int, block_ids, offsets, k, v) -> None:
+        """Scatter a streaming-prefill span's rows into already-committed
+        blocks, row-addressed (may land mid-block).
+
+        k/v: [L, n, K, hd] with row i bound for
+        ``(block_ids[i], offsets[i])`` of this pool.
+        """
+        self.pool_k = scatter_pool_rows(self.pool_k, block_ids, offsets, k)
+        self.pool_v = scatter_pool_rows(self.pool_v, block_ids, offsets, v)
 
     def drop_hosted(self, req_id: int) -> None:
         """Release a hosted span — pure metadata; rows are reused later."""

@@ -206,6 +206,63 @@ def read_pool_rows(pool: jax.Array, block_ids: Sequence[int],
     return rows.reshape((L, len(block_ids) * block_size) + rows.shape[3:])
 
 
+def rows_for_token_range(blocks: Sequence[int], block_size: int,
+                         t0: int, t1: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-token (block id, in-block offset) for rank-local tokens [t0, t1).
+
+    ``blocks`` is a request's sequence-ordered block list on ONE rank;
+    token ``t`` of that rank-local span lives at
+    ``(blocks[t // bs], t % bs)``. This is the addressing the streaming
+    prefill chunk writer uses to scatter KV rows into pre-reserved
+    blocks without ever materializing a dense cache.
+    """
+    pos = np.arange(t0, t1)
+    blk = np.asarray(blocks, np.int32)[pos // block_size]
+    off = (pos % block_size).astype(np.int32)
+    return blk, off
+
+
+def scatter_pool_rows(pool: jax.Array, block_ids, offsets,
+                      rows: jax.Array) -> jax.Array:
+    """Row-addressed scatter into a pool (functional update).
+
+    pool: [L, NB, bs, K, hd]; rows: [L, n, K, hd] written at
+    ``(block_ids[i], offsets[i])`` per row — unlike ``write_pool_rows``
+    this can land mid-block, which is what per-chunk streaming writes
+    into already-committed creditor blocks need.
+    """
+    blk = jnp.asarray(block_ids, jnp.int32)
+    off = jnp.asarray(offsets, jnp.int32)
+    return pool.at[:, blk, off].set(rows.astype(pool.dtype))
+
+
+def prefix_tables(pools: Sequence[RankKVPool], req_id: int,
+                  covered: Sequence[int], max_blocks: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Tables/tails addressing only the first ``covered[p]`` tokens of one
+    request on each rank — the streaming-prefill view of a request whose
+    blocks are all reserved up front but only partially written.
+
+    Returns (tables [n_ranks, 1, max_blocks] int32 -1-padded,
+             tail_len [n_ranks, 1] int32); a rank with zero coverage gets
+    an empty table (its MicroAttention partial is the monoid identity).
+    """
+    P = len(pools)
+    tables = -np.ones((P, 1, max_blocks), np.int32)
+    tails = np.zeros((P, 1), np.int32)
+    for p, pool in enumerate(pools):
+        bs = pool.block_size
+        c = int(covered[p])
+        rb = pool.requests.get(req_id)
+        if not rb or c <= 0:
+            tails[p, 0] = bs
+            continue
+        nb = -(-c // bs)
+        tables[p, 0, :nb] = rb.blocks[:nb]
+        tails[p, 0] = c - (nb - 1) * bs
+    return tables, tails
+
+
 def build_local_tables(pools: Sequence[RankKVPool], req_ids: Sequence[int],
                        max_blocks: int) -> Tuple[np.ndarray, np.ndarray]:
     """Device inputs for the paged kernel across ranks.
