@@ -21,6 +21,11 @@ import time
 from repro.configs import get_config, get_smoke_config
 from repro.serving.perfmodel import InstancePerfModel
 
+try:
+    from benchmarks.benchjson import write_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+
 TOTAL_CHIPS = 32
 INST_CHIPS = 8
 PREFILL_CHUNK = 512                 # production-scale streaming chunk
@@ -115,13 +120,26 @@ def measured_admission(csv=True):
 def main():
     t0 = time.perf_counter()
     rows = run()
-    measured_admission()
+    peak, dense = measured_admission()
     us = (time.perf_counter() - t0) * 1e6
     r = rows[0]
     print(f"bench_context_length,{us:.1f},"
           f"ctx_gain_vs_multi={r[3] / r[1]:.1f}x,"
           f"short_tps_gain_vs_single={r[6] / r[5]:.2f}x,"
           f"admit_mem_reduction={r[10] / r[11]:.0f}x")
+    write_bench_json(
+        "context_length", rows=rows,
+        config={"total_chips": TOTAL_CHIPS, "inst_chips": INST_CHIPS,
+                "prefill_chunk": PREFILL_CHUNK},
+        header=["arch", "maxctx_vllm_multi", "maxctx_vllm_single",
+                "maxctx_infinite", "short_tps_multi", "short_tps_single",
+                "short_tps_infinite", "long_tps_multi",
+                "long_tps_single", "long_tps_infinite",
+                "admit_stage_dense_gb", "admit_stage_chunk_gb"],
+        metrics={"ctx_gain_vs_multi": r[3] / r[1],
+                 "short_tps_gain_vs_single": r[6] / r[5],
+                 "admit_mem_reduction": r[10] / r[11],
+                 "admit_measured_reduction": dense / max(peak, 1)})
 
 
 if __name__ == "__main__":

@@ -17,6 +17,11 @@ import time
 from repro.configs import get_config
 from repro.distributed.hardware import V5E
 
+try:
+    from benchmarks.benchjson import write_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+
 RANKS = 4
 
 
@@ -130,6 +135,12 @@ def main():
     r = rows[-1]
     print(f"bench_distattn_methods,{us:.1f},"
           f"ring_over_dist_bytes_262k={r[3] / r[1]:.0f}x")
+    write_bench_json(
+        "distattn_methods", rows=rows,
+        config={"model": "mistral-nemo-12b", "ranks": RANKS},
+        header=["ctx", "dist_bytes", "dist_t", "ring_bytes", "ring_t",
+                "tp_bytes", "tp_t"],
+        metrics={"ring_over_dist_bytes_262k": r[3] / r[1]})
 
 
 if __name__ == "__main__":

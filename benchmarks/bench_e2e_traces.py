@@ -9,10 +9,15 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.traces import TRACE_SPECS, gen_trace, trace_stats
 from repro.configs import get_config
-from repro.serving.simulator import ClusterSimulator, SimRequest, \
-    make_policy_cluster
+from repro.serving.simulator import SimRequest, make_policy_cluster
+
+try:
+    from benchmarks.benchjson import write_bench_json
+    from benchmarks.traces import TRACE_SPECS, gen_trace, trace_stats
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+    from traces import TRACE_SPECS, gen_trace, trace_stats
 
 TOTAL_CHIPS = 32
 # Instance sizes chosen to match the paper's memory-pressure regime
@@ -87,6 +92,16 @@ def main():
     print(f"bench_e2e_traces,{us:.1f},"
           f"gain_short={min(short_g):.2f}-{max(short_g):.2f}x,"
           f"gain_long={min(long_g):.2f}-{max(long_g):.2f}x")
+    write_bench_json(
+        "e2e_traces", rows=rows,
+        config={"model": "mistral-nemo-12b", "total_chips": TOTAL_CHIPS,
+                "inst_chips_short": INST_CHIPS_SHORT,
+                "inst_chips_long": INST_CHIPS_LONG, "n_req": N_REQ,
+                "rate": RATE},
+        header=["trace", "baseline", "inf_tps", "base_tps", "gain",
+                "inf_done", "base_done", "inf_fail", "base_fail"],
+        metrics={"gain_short_min": min(short_g),
+                 "gain_long_min": min(long_g)})
 
 
 if __name__ == "__main__":

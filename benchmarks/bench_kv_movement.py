@@ -20,6 +20,11 @@ from repro.models.model import init_params
 from repro.serving import Cluster, Request, SamplingParams
 from repro.serving.perfmodel import InstancePerfModel
 
+try:
+    from benchmarks.benchjson import write_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+
 
 def modeled(csv=True):
     cfg = get_config("mistral-nemo-12b")
@@ -76,12 +81,21 @@ def measured(csv=True):
 def main():
     t0 = time.perf_counter()
     rows = modeled()
-    measured()
+    mrows = measured()
     us = (time.perf_counter() - t0) * 1e6
     # break-even: largest m with overlapped == no-move throughput
     base = rows[0][3]
     be = max((r[0] for r in rows if r[3] >= base * 0.995), default=0)
     print(f"bench_kv_movement,{us:.1f},overlap_breakeven_tokens={be}")
+    write_bench_json(
+        "kv_movement",
+        rows=[list(r) for r in rows] + [list(r) for r in mrows],
+        config={"model_modeled": "mistral-nemo-12b", "chips": 8,
+                "model_measured": "olmo-1b-smoke"},
+        header=["tokens_per_step_or_chunk", "step_ms_or_tps",
+                "move_ms_or_moved_bytes", "tps_overlap_or_gather_us",
+                "tps_serial"],
+        metrics={"overlap_breakeven_tokens": be})
 
 
 if __name__ == "__main__":

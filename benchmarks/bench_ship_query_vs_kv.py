@@ -12,6 +12,11 @@ import time
 from repro.configs import get_config
 from repro.distributed.hardware import V5E
 
+try:
+    from benchmarks.benchjson import write_bench_json
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+
 
 def run(csv=True):
     cfg = get_config("mistral-nemo-12b")     # LLaMA2-13B-class dims
@@ -45,6 +50,13 @@ def main():
     ratio = rows[-1][2] / rows[-1][1]
     print(f"bench_ship_query_vs_kv,{us:.1f},kv_over_query_bytes_131k="
           f"{ratio:.0f}x")
+    write_bench_json(
+        "ship_query_vs_kv", rows=rows,
+        config={"model": "mistral-nemo-12b"},
+        header=["ctx", "ship_query_bytes", "ship_kv_bytes",
+                "t_query_ici_ms", "t_kv_ici_ms", "t_query_dcn_ms",
+                "t_kv_dcn_ms"],
+        metrics={"kv_over_query_bytes_131k": ratio})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""Machine-readable benchmark output: ``BENCH_<name>.json`` files.
+
+Every ``benchmarks/bench_*.py`` writes one JSON at the repo root with
+its rows, the config that produced them, the git sha, and a flat
+``metrics`` dict of key scalars. ``benchmarks/run.py`` aggregates the
+per-bench files into ``BENCH_summary.json``; CI uploads all of them as
+workflow artifacts and ``benchmarks/compare.py`` gates the metrics
+against the committed ``benchmarks/baselines.json``.
+
+Gated metrics are HIGHER-IS-BETTER by convention (ratios, throughputs,
+break-even points); store the inverse of anything lower-is-better.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT, check=True,
+            capture_output=True, text=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(name: str, *, rows: Sequence[Sequence],
+                     config: Dict, metrics: Dict[str, float],
+                     header: Optional[List[str]] = None,
+                     out_dir: Optional[Path] = None) -> Path:
+    """Write ``BENCH_<name>.json`` at the repo root. Returns the path."""
+    out_dir = Path(out_dir) if out_dir is not None else REPO_ROOT
+    path = out_dir / f"BENCH_{name}.json"
+    doc = {
+        "name": name,
+        "git_sha": git_sha(),
+        "config": config,
+        "header": header,
+        "rows": [list(r) for r in rows],
+        "metrics": {k: float(v) for k, v in metrics.items()},
+    }
+    path.write_text(json.dumps(doc, indent=2, default=str) + "\n")
+    return path
+
+
+def collect_bench_jsons(out_dir: Optional[Path] = None) -> Dict[str, Dict]:
+    """All BENCH_*.json currently at the repo root, keyed by bench name
+    (the aggregate summary file itself is excluded)."""
+    out_dir = Path(out_dir) if out_dir is not None else REPO_ROOT
+    out = {}
+    for p in sorted(out_dir.glob("BENCH_*.json")):
+        if p.name == "BENCH_summary.json":
+            continue
+        try:
+            doc = json.loads(p.read_text())
+        except json.JSONDecodeError:
+            continue
+        out[doc.get("name", p.stem[len("BENCH_"):])] = doc
+    return out

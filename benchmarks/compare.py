@@ -1,0 +1,94 @@
+"""CI benchmark gate: fail on >20% regression vs committed baselines.
+
+Usage: PYTHONPATH=src python benchmarks/compare.py [--tolerance 0.2]
+           [--strict]
+
+Reads every ``BENCH_<name>.json`` at the repo root (produced by the
+benchmarks that just ran) and compares each metric listed in
+``benchmarks/baselines.json`` against its committed baseline value.
+Metrics are HIGHER-IS-BETTER by convention (store the inverse of
+anything lower-is-better); a metric that dropped below
+``(1 - tolerance) * baseline`` fails the gate. By default only benches
+whose JSON is present are compared (the fast PR job runs a smoke
+subset); ``--strict`` (the nightly full sweep) additionally fails on
+any baselined bench whose JSON is missing. Metrics present in the
+fresh JSONs but absent from the baselines are reported as
+informational only, so adding a new benchmark never breaks CI until
+its baseline is committed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+try:
+    from benchmarks.benchjson import collect_bench_jsons
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import collect_bench_jsons
+
+BASELINES = Path(__file__).resolve().parent / "baselines.json"
+
+
+def compare(tolerance: float = 0.2, strict: bool = False) -> int:
+    baselines = json.loads(BASELINES.read_text())
+    fresh = collect_bench_jsons()
+    failures = []
+    compared = 0
+    for bench, metrics in sorted(baselines.items()):
+        doc = fresh.get(bench)
+        if doc is None:
+            if strict:
+                failures.append(f"{bench}: BENCH_{bench}.json missing "
+                                f"(benchmark did not run?)")
+            else:
+                print(f"{'SKIPPED':10s} {bench}: no fresh JSON "
+                      f"(not part of this run)")
+            continue
+        compared += 1
+        got = doc.get("metrics", {})
+        for key, base in sorted(metrics.items()):
+            if key not in got:
+                failures.append(f"{bench}.{key}: metric missing")
+                continue
+            new = got[key]
+            floor = (1.0 - tolerance) * base
+            status = "OK" if new >= floor else "REGRESSION"
+            print(f"{status:10s} {bench}.{key}: {new:.4g} "
+                  f"(baseline {base:.4g}, floor {floor:.4g})")
+            if new < floor:
+                failures.append(
+                    f"{bench}.{key}: {new:.4g} < {floor:.4g} "
+                    f"(>{tolerance:.0%} regression vs {base:.4g})")
+    # Informational: fresh metrics without a committed baseline.
+    for bench, doc in sorted(fresh.items()):
+        for key, val in sorted(doc.get("metrics", {}).items()):
+            if key not in baselines.get(bench, {}):
+                print(f"{'NEW':10s} {bench}.{key}: {val:.4g} "
+                      f"(no baseline committed)")
+    if compared == 0:
+        failures.append("no baselined bench produced a JSON — nothing "
+                        "was gated")
+    if failures:
+        print("\nBenchmark gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"\nBenchmark gate passed ({compared} benches).")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional drop vs baseline")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail if any baselined bench JSON is missing "
+                         "(nightly full sweep)")
+    args = ap.parse_args()
+    sys.exit(compare(args.tolerance, strict=args.strict))
+
+
+if __name__ == "__main__":
+    main()

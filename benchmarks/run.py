@@ -1,10 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-Each prints CSV rows followed by a ``name,us_per_call,derived`` summary.
+Each prints CSV rows followed by a ``name,us_per_call,derived`` summary
+AND writes a machine-readable ``BENCH_<name>.json`` at the repo root
+(rows + config + git sha + key metrics). This harness aggregates the
+per-bench JSONs into ``BENCH_summary.json``; CI uploads everything as
+artifacts and gates the metrics with ``benchmarks/compare.py``.
 Run: PYTHONPATH=src python -m benchmarks.run [filter]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -12,6 +17,7 @@ import traceback
 from benchmarks import (bench_context_length, bench_debtor_creditor,
                         bench_distattn_methods, bench_e2e_traces,
                         bench_kv_movement, bench_ship_query_vs_kv)
+from benchmarks.benchjson import REPO_ROOT, collect_bench_jsons, git_sha
 
 BENCHES = [
     ("fig4c_ship_query_vs_kv", bench_ship_query_vs_kv.main),
@@ -21,6 +27,21 @@ BENCHES = [
     ("fig11_distattn_methods", bench_distattn_methods.main),
     ("fig12_kv_movement", bench_kv_movement.main),
 ]
+
+
+def aggregate() -> dict:
+    """Merge every BENCH_<name>.json into BENCH_summary.json."""
+    docs = collect_bench_jsons()
+    summary = {
+        "git_sha": git_sha(),
+        "benches": sorted(docs),
+        "metrics": {name: doc.get("metrics", {})
+                    for name, doc in docs.items()},
+    }
+    out = REPO_ROOT / "BENCH_summary.json"
+    out.write_text(json.dumps(summary, indent=2) + "\n")
+    print(f"# wrote {out} ({len(docs)} bench files aggregated)")
+    return summary
 
 
 def main() -> None:
@@ -38,6 +59,7 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name},FAILED,")
         print(f"# {name} total {(time.perf_counter() - t0):.1f}s")
+    aggregate()
     if failures:
         sys.exit(1)
 

@@ -15,7 +15,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

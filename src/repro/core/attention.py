@@ -13,14 +13,9 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.online_softmax import (
-    combine,
-    empty_partial,
-    finalize,
-    merge_partials,
-    micro_attention_decode,
-    micro_attention_prefill,
-)
+from repro.core.online_softmax import (combine, empty_partial, finalize,
+                                       micro_attention_decode,
+                                       micro_attention_prefill)
 
 
 def full_attention_decode(q, k, v, mask, *, scale=None) -> jax.Array:

@@ -7,7 +7,6 @@ visible in lowered HLO for the Fig. 11 benchmark.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.online_softmax import (
     combine, empty_partial, finalize,

@@ -14,7 +14,7 @@ Conventions (single pod mesh: ("data", "model"); multi-pod adds "pod"):
 from __future__ import annotations
 
 import re
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -6,7 +6,6 @@ donate hints — with zero device allocation (weak-type-correct stand-ins).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import os
 from typing import Any, Dict, NamedTuple, Optional, Tuple

@@ -12,10 +12,9 @@ collective-permute ops (per-device program -> per-chip bytes).
 """
 from __future__ import annotations
 
-import json
 import re
-from dataclasses import asdict, dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.hardware import V5E, HardwareSpec

@@ -6,7 +6,6 @@ production-mesh program (CPU host) for any assigned arch.
   PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --aot
 """
 import argparse
-import dataclasses
 import time
 
 

@@ -6,7 +6,7 @@ decode (paged DistAttention with collective merge).
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.attention import sliding_window_mask_decode
-from repro.core.online_softmax import micro_attention_decode
 from repro.core.attention import full_attention_decode
 from repro.models.attention import (apply_attention_train, init_attention,
                                     make_causal_core, qkv_project)
@@ -195,7 +194,8 @@ def forward(params, cfg: ModelConfig, tokens=None, embeds=None, *,
                             interpret=interpret)
     aux = jnp.zeros((), jnp.float32)
     lc = layer_constraints or {}
-    pin = lambda name, lp: lc[name](lp) if name in lc else lp
+    def pin(name, lp):
+        return lc[name](lp) if name in lc else lp
 
     def ckpt(fn):
         if not remat:
@@ -297,7 +297,6 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         kv_k = jnp.zeros((L, batch, max_len, K, hd), dtype)
         kv_v = jnp.zeros((L, batch, max_len, K, hd), dtype)
     elif cfg.family == "hybrid":
-        pat = cfg.block_pattern
         n_attn = sum(1 for i in range(cfg.num_layers)
                      if cfg.layer_kind(i) == "attn")
         w = min(max_len, cfg.local_window)
@@ -361,7 +360,6 @@ def _attn_layer_decode(lp, x, ck, cv, lens, cfg, *, moe=False, window=0):
 def decode_step(params, cfg: ModelConfig, state: DecodeState,
                 tokens: jax.Array) -> Tuple[jax.Array, DecodeState]:
     """One decode step for a batch. tokens: [B] -> (logits [B,V], state)."""
-    B = tokens.shape[0]
     x = embed_tokens(params, cfg, tokens[:, None], None,
                      positions=state.lens[:, None])
     lens = state.lens
@@ -398,7 +396,6 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState,
         new_state = DecodeState(ck_all, cv_all, lens + 1, None)
 
     elif cfg.family == "hybrid":
-        pat = cfg.block_pattern
         conv_c, lru_h = state.rec
         ck_all, cv_all = state.kv_k, state.kv_v
         ai = ri = 0
@@ -428,7 +425,6 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState,
 
     elif cfg.family == "ssm":
         rec = state.rec
-        se = cfg.slstm_every
 
         def gbody(x, xs):
             gp, mst, sst = xs

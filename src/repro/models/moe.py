@@ -57,8 +57,9 @@ def _expert_ffn(bank, x_e, cfg: ModelConfig, ep_pin: bool = False):
     wg = bank.get("wg")
     if ep_pin:
         from jax.sharding import PartitionSpec as P
-        pin = lambda w: jax.lax.with_sharding_constraint(
-            w, P("model", None, None))
+        def pin(w):
+            return jax.lax.with_sharding_constraint(
+                w, P("model", None, None))
         wi, wo = pin(wi), pin(wo)
         wg = pin(wg) if wg is not None else None
     h = jnp.einsum("ecd,edf->ecf", x_e, wi)

@@ -29,7 +29,7 @@ paged path and for the mesh/collective version in
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,14 +38,11 @@ from repro.configs.base import ModelConfig
 from repro.core.online_softmax import (combine, finalize,
                                        micro_attention_decode,
                                        micro_attention_prefill)
-from repro.models.attention import apply_attention_train, make_causal_core, \
-    qkv_project
+from repro.models.attention import make_causal_core, qkv_project
 from repro.models.common import apply_ffn, apply_norm
-from repro.models.model import (DecodeState, _attn_layer_fwd, _layer_params,
-                                _rglru_layer_fwd, embed_tokens,
-                                init_decode_state, unembed)
+from repro.models.model import (DecodeState, _attn_layer_fwd, _rglru_layer_fwd,
+                                embed_tokens, init_decode_state, unembed)
 from repro.models.moe import apply_moe
-from repro.models.rglru import apply_rglru_block
 from repro.models.xlstm import (MLstmState, SLstmState, apply_mlstm_block,
                                 apply_slstm_block)
 
@@ -56,7 +53,6 @@ from repro.models.xlstm import (MLstmState, SLstmState, apply_mlstm_block,
 def _ring_fill(cache, k, T, maxlen):
     """Write the last min(T, maxlen) tokens of k [B,T,K,hd] into ring cache
     [B, maxlen, K, hd] at slots (abs_pos % maxlen)."""
-    B = k.shape[0]
     n = min(T, maxlen)
     p0 = T - n
     abs_pos = p0 + jnp.arange(n)
@@ -284,7 +280,6 @@ def decode_step_dist(params, cfg: ModelConfig, state: DecodeState,
     positions [0, start)); remote_len: [B] valid remote tokens.
     """
     assert cfg.family in ("dense", "moe"), "only attention archs pool KV"
-    B = tokens.shape[0]
     lens = state.lens
     x = embed_tokens(params, cfg, tokens[:, None], None,
                      positions=lens[:, None])

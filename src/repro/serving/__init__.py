@@ -5,10 +5,12 @@ from repro.serving.kvpool import BlockAllocator, RankKVPool
 from repro.serving.perfmodel import InstancePerfModel, cluster_tps
 from repro.serving.request import Request, RequestState, SamplingParams
 from repro.serving.rmanager import RManager
-from repro.serving.scheduler import GreedyScheduler, InstanceView
+from repro.serving.scheduler import (GreedyScheduler, InstanceView,
+                                     SpanLeg, StripedMove)
 
 __all__ = [
     "Cluster", "InstanceEngine", "GManager", "BlockAllocator", "RankKVPool",
     "InstancePerfModel", "cluster_tps", "Request", "RequestState",
     "SamplingParams", "RManager", "GreedyScheduler", "InstanceView",
+    "SpanLeg", "StripedMove",
 ]

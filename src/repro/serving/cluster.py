@@ -17,6 +17,10 @@ plus table edits. Two movement protocols exist:
   * **read-copy-free** (decode-time moves, reactive or Algorithm-1):
     read the oldest blocks out of the debtor's pool, write them into
     blocks reserved in the creditor's pool, free the debtor's blocks.
+    Algorithm-1 plans are STRIPED: one ``MoveKVCache`` may carry legs
+    for several creditors (or, for reclaim plans, evict a hosted span
+    back to its owner / sideways); every leg is reserved before any
+    byte moves and one refusal rolls the whole plan back.
 
 Requests whose KV spans instances decode via the owner's multi-rank
 ``decode_step_paged`` merge (the creditor pools are read directly,
@@ -30,7 +34,6 @@ recomputable from tokens); hosted blocks are reclaimed.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
@@ -38,8 +41,26 @@ from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
 from repro.serving.kvpool import rows_for_token_range
 from repro.serving.perfmodel import InstancePerfModel
-from repro.serving.protocol import MoveKVCache, MoveResult
+from repro.serving.protocol import MoveKVCache, MoveLeg, MoveResult
 from repro.serving.request import Request, RequestState
+
+
+def reserve_all_or_nothing(req_id: int, legs) -> bool:
+    """FCFS-reserve every (rmanager, n_blocks) leg of a striped plan.
+
+    Paper Fig. 8 step 4 generalized to multi-destination plans: either
+    EVERY destination accepts its reservation or every reservation made
+    so far is cancelled — allocator state is restored exactly and the
+    caller sees a clean REJECTED. ``legs``: [(rmanager, n_blocks)].
+    """
+    reserved = []
+    for rm, n in legs:
+        if not rm.try_move_kvcache(req_id, n):
+            for rm2, m in reserved:
+                rm2.cancel_move_in(m)
+            return False
+        reserved.append((rm, n))
+    return True
 
 
 class PrefixSink:
@@ -98,7 +119,9 @@ class Cluster:
                  max_batch: int = 8, max_local_len: int = 128,
                  pool_blocks: int = 64, block_size: int = 16,
                  move_chunk_tokens: int = 16, schedule_every: int = 4,
-                 heartbeat_timeout: float = 3.0, prefill_chunk: int = 32):
+                 heartbeat_timeout: float = 3.0, prefill_chunk: int = 32,
+                 avg_new_req_len: int = 512, max_stripes: int = 8,
+                 perf: Optional[InstancePerfModel] = None):
         self.cfg = cfg
         self.block_size = block_size
         self.move_chunk = move_chunk_tokens
@@ -114,11 +137,13 @@ class Cluster:
         for eng in self.engines.values():
             eng.prefix_sink = self._make_prefix_sink(eng.inst_id)
             eng.peers = self.engines      # shared: add_instance updates all
-        perf = InstancePerfModel(cfg)
+        perf = perf if perf is not None else InstancePerfModel(cfg)
         self.gmanager = GManager(perf, block_size,
                                  heartbeat_timeout=heartbeat_timeout,
                                  beta_thres=max_batch,
-                                 mem_util_thres=0.8)
+                                 mem_util_thres=0.8,
+                                 avg_new_req_len=avg_new_req_len,
+                                 max_stripes=max_stripes)
         self.requests: Dict[int, Request] = {}
         self._step_count = 0
         self._dead: set = set()
@@ -178,38 +203,90 @@ class Cluster:
         return sink
 
     def _execute_move(self, mv: MoveKVCache) -> MoveResult:
-        """Move the oldest blocks of a request to a creditor.
+        """Execute one striped plan: the oldest blocks of a request's
+        span on ``src_inst`` stream onto one or more destinations.
 
-        Pure pool-row copies + table edits: no dense KV arrays are ever
-        materialized outside the two pools."""
-        if mv.src_inst in self._dead or mv.dst_inst in self._dead:
+        All-or-nothing: EVERY leg is reserved on its destination first
+        (try_move_kvcache, FCFS); if any leg is refused all reservations
+        are cancelled and nothing moved. Only then does each leg copy
+        pool rows + edit tables — no dense KV arrays are ever
+        materialized outside the pools. Handles both offload plans
+        (src = owner, keep the live tail local) and reclaim plans
+        (src = a stressed creditor; a leg whose destination is the
+        OWNER re-adopts blocks at the FRONT of its local span)."""
+        if mv.src_inst in self._dead or \
+                any(leg.dst_inst in self._dead for leg in mv.legs):
             return MoveResult.REJECTED
         src = self.engines[mv.src_inst]
-        dst = self.engines[mv.dst_inst]
         req = self.requests.get(mv.req_id)
         if req is None or req.done or req.slot is None:
             return MoveResult.GONE
-        # Clamp to the full blocks the owner can give up (keep >= 1).
-        bs = self.block_size
-        local_tokens = src.local_tokens(req)
-        n_blocks = min(mv.num_blocks, max(0, local_tokens - bs) // bs)
-        if n_blocks <= 0:
+        owner = next((e for e in self.engines.values()
+                      if e.inst_id not in self._dead and req in e.running),
+                     None)
+        if owner is None:
             return MoveResult.GONE
-        n_tokens = n_blocks * bs
-        # Paper Fig. 8 step 4: FCFS reservation on the destination.
-        if not dst.rmanager.try_move_kvcache(mv.req_id, n_blocks):
+        bs = self.block_size
+        if mv.src_inst == owner.inst_id:
+            # Offload: only full blocks, keep the live tail local.
+            budget = max(0, src.local_tokens(req) - bs) // bs
+        else:
+            # Reclaim: src hosts a whole-block span (or the plan is
+            # stale and the span is gone).
+            rb = src.rmanager.pool.requests.get(mv.req_id)
+            budget = len(rb.blocks) if rb is not None else 0
+        # Clamp legs in order against what src can actually give up.
+        legs = []
+        for leg in mv.legs:
+            n = min(leg.num_blocks, budget)
+            if n <= 0:
+                continue
+            if leg.dst_inst == owner.inst_id and mv.src_inst != \
+                    owner.inst_id:
+                # Re-adopting at the owner must respect its local quota
+                # (headroom for the next decode append included).
+                room = (owner.max_local_len - owner.local_tokens(req)
+                        - bs) // bs
+                n = min(n, max(0, room))
+                if n <= 0:
+                    continue
+            legs.append((leg.dst_inst, n))
+            budget -= n
+        if not legs:
+            return MoveResult.GONE
+        # Paper Fig. 8 step 4, striped: FCFS reservation on EVERY
+        # destination before any KV byte moves; one refusal rolls every
+        # reservation back.
+        if not reserve_all_or_nothing(
+                mv.req_id,
+                [(self.engines[d].rmanager, n) for d, n in legs]):
             return MoveResult.REJECTED
-        k, v = src.extract_prefix_kv(req, n_blocks)
-        blocks = dst.rmanager.commit_move_in(mv.req_id, n_blocks,
-                                             at_front=False)
-        dst.host_kv(mv.req_id, blocks, k, v)
-        src.rmanager.move_out_prefix(mv.req_id, n_blocks)
-        insts = src.remote_insts.setdefault(mv.req_id, [])
-        if mv.dst_inst not in insts:
-            insts.append(mv.dst_inst)
-        nbytes = int(k.size + v.size) * k.dtype.itemsize
-        src.stats.kv_moved += nbytes
-        src.stats.tokens_moved_steps.append(n_tokens)
+        # Commit: each leg is pool-row copies + table edits, oldest
+        # blocks first so the source span drains front-to-back.
+        for dst_id, n in legs:
+            dst = self.engines[dst_id]
+            k, v = src.extract_prefix_kv(req, n)
+            blocks = dst.rmanager.commit_move_in(
+                mv.req_id, n, at_front=(dst_id == owner.inst_id))
+            dst.host_kv(mv.req_id, blocks, k, v)
+            src.rmanager.move_out_prefix(mv.req_id, n)
+            if dst_id != owner.inst_id:
+                insts = owner.remote_insts.setdefault(mv.req_id, [])
+                if dst_id not in insts:
+                    insts.append(dst_id)
+            nbytes = int(k.size + v.size) * k.dtype.itemsize
+            src.stats.kv_moved += nbytes
+            src.stats.tokens_moved_steps.append(n * bs)
+        # A reclaim that drained the source span drops it from the
+        # owner's span map (and frees the host's metadata).
+        if mv.src_inst != owner.inst_id and \
+                not src.rmanager.pool.tokens_of(mv.req_id):
+            src.drop_hosted(mv.req_id)
+            insts = owner.remote_insts.get(mv.req_id)
+            if insts and mv.src_inst in insts:
+                insts.remove(mv.src_inst)
+                if not insts:
+                    owner.remote_insts.pop(mv.req_id, None)
         return MoveResult.OK
 
     def _reactive_moves(self) -> None:
@@ -223,7 +300,8 @@ class Cluster:
                     n_blocks = max(1, self.move_chunk // self.block_size)
                     ok = (dst is not None and
                           self._execute_move(MoveKVCache(
-                              req.req_id, n_blocks, eng.inst_id, dst))
+                              req.req_id, eng.inst_id,
+                              [MoveLeg(dst, n_blocks)]))
                           == MoveResult.OK)
                     if not ok and eng.local_free_tokens(req) <= 0:
                         # The next append would breach the quota and no

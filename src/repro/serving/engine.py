@@ -24,7 +24,12 @@ bytes live in the instance's device-resident block pool
     ``host_kv_rows`` takes the prefill stream's row-addressed writes;
     dropping them is a metadata release),
   * moving KV between instances copies pool rows and edits tables —
-    shapes never change, so the decode step never retraces from growth.
+    shapes never change, so the decode step never retraces from growth;
+    a striped Algorithm-1 plan is just a sequence of such copies, one
+    per (destination, k-blocks) leg, each reserved before any byte
+    moves. Whole blocks carry complete (position-encoded) KV rows, so
+    cross-rank placement and within-rank block order are
+    correctness-neutral — only the per-span merge traffic changes.
 
 ``max_local_len`` survives as the per-request LOCAL QUOTA (the paper's
 instance-local budget): when a request's local span approaches it the
@@ -37,7 +42,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -340,7 +345,6 @@ class InstanceEngine:
     def _step_paged(self) -> Optional[jnp.ndarray]:
         """One decode iteration over the pool path. Returns logits."""
         pool = self.rmanager.pool
-        bs = self.block_size
         t0 = time.perf_counter()
         # Reserve this step's token in each request's tail block. A
         # failed append means the pool is exhausted: reject loudly,
@@ -437,7 +441,10 @@ class InstanceEngine:
         return self.max_local_len - self.local_tokens(req) - 1
 
     def extract_prefix_kv(self, req: Request, n_blocks: int):
-        """Read the OLDEST n full blocks' rows out of the local pool."""
+        """Read the OLDEST n full blocks' rows of this rank's span of
+        ``req`` out of the pool — the request's local prefix when this
+        rank owns it, or the hosted span when this rank is a creditor
+        being reclaimed (striped-plan eviction path)."""
         blocks = self.rmanager.pool.requests[req.req_id].blocks[:n_blocks]
         k = read_pool_rows(self.pool_k, blocks, self.block_size)
         v = read_pool_rows(self.pool_v, blocks, self.block_size)

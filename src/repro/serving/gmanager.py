@@ -5,15 +5,25 @@ Maintains the request placement map from periodic rManager heartbeats
 heartbeat timeouts, runs Algorithm 1 periodically, and emits MoveKVCache
 instructions. The map is deliberately allowed to go stale — safety comes
 from the try_move reservation on the destination (paper Fig. 8 step 4-5).
+
+Striped-plan protocol: since the multi-creditor generalization each
+``MoveKVCache`` carries a LIST of legs (destination, whole blocks) for
+one source request — ``plan_moves`` translates the scheduler's
+``StripedMove``s one-to-one. The per-request placement map is
+cross-referenced when building scheduler views: every owner view gets
+``req_spans`` (req_id -> {creditor: blocks}, rebuilt fresh from the
+heartbeat entries each planning round), and because the scheduler plans
+against COPIES, ``_views`` stays consistent with the heartbeat state no
+matter how many times planning runs between beats.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.serving.perfmodel import InstancePerfModel
-from repro.serving.protocol import (Heartbeat, MoveKVCache,
+from repro.serving.protocol import (Heartbeat, MoveKVCache, MoveLeg,
                                     RequestPlacementEntry)
 from repro.serving.scheduler import GreedyScheduler, InstanceView
 
@@ -34,10 +44,13 @@ class _InstanceStatus:
 class GManager:
     def __init__(self, perf: InstancePerfModel, block_size: int,
                  heartbeat_timeout: float = 3.0,
-                 beta_thres: int = 64, mem_util_thres: float = 0.8):
+                 beta_thres: int = 64, mem_util_thres: float = 0.8,
+                 avg_new_req_len: int = 512, max_stripes: int = 8):
         self.scheduler = GreedyScheduler(perf, block_size,
                                          beta_thres=beta_thres,
-                                         mem_util_thres=mem_util_thres)
+                                         mem_util_thres=mem_util_thres,
+                                         avg_new_req_len=avg_new_req_len,
+                                         max_stripes=max_stripes)
         self.block_size = block_size
         self.timeout = heartbeat_timeout
         self.instances: Dict[int, _InstanceStatus] = {}
@@ -98,27 +111,45 @@ class GManager:
 
     # --- planning ------------------------------------------------------ #
     def _views(self) -> List[InstanceView]:
+        # Cross-instance placement: req_id -> {creditor_inst: blocks}
+        # (every non-local slice), and req_id -> total blocks anywhere.
+        spans: Dict[int, Dict[int, int]] = {}
+        total_blocks: Dict[int, int] = {}
+        for st in self.instances.values():
+            for rid, e in st.entries.items():
+                total_blocks[rid] = total_blocks.get(rid, 0) + e.num_blocks
+                if not e.local:
+                    spans.setdefault(rid, {})[st.inst_id] = e.num_blocks
         views = []
         for st in self.instances.values():
             reqs = {}
+            off = 0
+            req_spans: Dict[int, Dict[int, int]] = {}
             for rid, e in st.entries.items():
-                # total length is only known to the owner; approximate by
-                # this instance's share (the scheduler only needs owned
-                # lengths, where local=True gives the true tail holder).
-                reqs[rid] = (e.num_blocks * self.block_size,
-                             e.num_blocks, e.local)
+                # The owner sees the request's TRUE total length (its
+                # local slice plus every creditor span); a creditor only
+                # sees its own slice.
+                n = total_blocks[rid] if e.local else e.num_blocks
+                reqs[rid] = (n * self.block_size, e.num_blocks, e.local)
+                if e.local and rid in spans:
+                    req_spans[rid] = dict(spans[rid])
+                    off += sum(spans[rid].values()) * self.block_size
             hosted = sum(e.num_blocks for e in st.entries.values()
                          if not e.local) * self.block_size
             views.append(InstanceView(
                 inst_id=st.inst_id, batch_size=st.batch_size,
                 mem_blocks_total=st.mem_blocks_total,
                 mem_blocks_used=st.mem_blocks_used,
-                requests=reqs, hosted_tokens=hosted, alive=st.alive))
+                requests=reqs, offloaded_tokens=off,
+                hosted_tokens=hosted, alive=st.alive,
+                req_spans=req_spans))
         return views
 
     def plan_moves(self) -> List[MoveKVCache]:
         moves = self.scheduler.plan(self._views())
-        return [MoveKVCache(m.req_id, m.num_blocks, m.src, m.dst)
+        return [MoveKVCache(m.req_id, m.src,
+                            [MoveLeg(leg.dst, leg.num_blocks)
+                             for leg in m.legs], kind=m.kind)
                 for m in moves]
 
     # --- placement queries for new requests ----------------------------- #

@@ -99,9 +99,34 @@ class InstancePerfModel:
         return self.t_layer(beta, lengths) + host_bytes / \
             (self.hw.hbm_bw * self.chips)
 
+    # --- striped-span merge traffic (per (request, creditor) entry) --- #
+    def merge_bytes_per_span_layer(self) -> float:
+        """Per-step, per-layer bytes exchanged for ONE (request, creditor)
+        span entry: the shipped query q plus the returned MicroAttention
+        partial (o, m, l) — exactly what ``CommStats.query_shipped``
+        counts on the real engine. Every extra stripe of a request adds
+        one more of these exchanges per step."""
+        c = self.cfg
+        q = c.num_heads * c.head_dim * self.bytes_per_el
+        o = c.num_heads * c.head_dim * 4          # f32 partial output
+        ml = 2 * c.num_heads * 4                  # f32 max + log-sum-exp
+        return q + o + ml
+
+    def t_span_merge(self, span_entries: int) -> float:
+        """Per-layer time spent on striped-span query/merge traffic.
+
+        Each entry pays its bytes over the inter-instance link plus a
+        per-message hop latency — the term that makes striping a request
+        across many creditors a modeled cost, not a free lunch."""
+        if span_entries <= 0:
+            return 0.0
+        b = span_entries * self.merge_bytes_per_span_layer()
+        return b / self.hw.ici_link_bw + span_entries * self.alpha_hop
+
     # --- Eq. 7: instance / cluster throughput ------------------------- #
     def tps(self, beta: int, lengths: Sequence[int],
-            offloaded_tokens: int = 0, hosted_tokens: int = 0) -> float:
+            offloaded_tokens: int = 0, hosted_tokens: int = 0,
+            span_entries: int = 0, max_span_tokens: int = 0) -> float:
         """Decode tokens/second of the instance.
 
         Beyond the paper's Eq. 6 we enforce its §5.2.1 coverage
@@ -109,17 +134,28 @@ class InstancePerfModel:
         MicroAttention it depends on — its effective layer time is
         max(local time after offload, remote MA time). Without this the
         model claims unbounded gain from offloading everything.
+
+        ``span_entries`` counts this instance's (request, creditor) span
+        pairs: each pays per-step query/merge traffic (t_span_merge).
+        ``max_span_tokens`` (optional) is the largest single-creditor
+        slice of this instance's offloaded KV: remote MicroAttention
+        runs in PARALLEL across creditors, so the remote bound is the
+        slowest slice, not the total — striping over more creditors
+        shrinks it (at the cost of more span entries). When 0, the
+        single-creditor worst case (all offloaded on one rank) is
+        assumed.
         """
-        if beta <= 0 and hosted_tokens <= 0:
-            return 0.0
         if beta <= 0:
             return 0.0
-        off_t = offloaded_tokens * self.kv_bytes_per_token_layer() / \
+        per_tok_t = self.kv_bytes_per_token_layer() / \
             (self.hw.hbm_bw * self.chips)
+        off_t = offloaded_tokens * per_tok_t
+        slice_tokens = max_span_tokens if max_span_tokens > 0 \
+            else offloaded_tokens
         t_local = self.t_layer(beta, lengths) - off_t
-        t = max(t_local, off_t)                    # Fig. 6(a) coverage
-        t += hosted_tokens * self.kv_bytes_per_token_layer() / \
-            (self.hw.hbm_bw * self.chips)
+        t = max(t_local, slice_tokens * per_tok_t)  # Fig. 6(a) coverage
+        t += hosted_tokens * per_tok_t
+        t += self.t_span_merge(span_entries)
         t = max(t, 1e-12)
         return beta / (self.cfg.num_layers * t)
 

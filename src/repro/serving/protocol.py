@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List
 
 
 @dataclass(frozen=True)
@@ -33,13 +33,34 @@ class Heartbeat:
     removed_req_ids: List[int] = field(default_factory=list)
 
 
+@dataclass(frozen=True)
+class MoveLeg:
+    """One stripe of a movement plan: whole blocks onto one instance."""
+    dst_inst: int
+    num_blocks: int
+
+
 @dataclass
 class MoveKVCache:
-    """gManager instruction: move num_blocks of req_id src -> dst."""
+    """gManager instruction: move req_id's oldest blocks from src_inst
+    onto one or MORE destinations (a striped span plan).
+
+    The runtime must execute the legs all-or-nothing: every destination
+    is reserved (try_move_kvcache, FCFS) before any KV byte moves; if
+    any leg is refused every reservation is cancelled and the plan is
+    REJECTED — a stale global view can waste a plan, never corrupt
+    state. ``kind`` is "offload" (debtor -> creditors) or "reclaim"
+    (a stressed creditor evicts a hosted span back to its owner or
+    sideways to other creditors).
+    """
     req_id: int
-    num_blocks: int
     src_inst: int
-    dst_inst: int
+    legs: List[MoveLeg]
+    kind: str = "offload"
+
+    @property
+    def num_blocks(self) -> int:
+        return sum(leg.num_blocks for leg in self.legs)
 
 
 class MoveResult(enum.Enum):

@@ -9,12 +9,10 @@ a reservation that never commits is just cancelled numbers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict, List, Optional, Set
 
 from repro.serving.kvpool import RankKVPool
-from repro.serving.protocol import (Heartbeat, MoveResult,
-                                    RequestPlacementEntry)
+from repro.serving.protocol import Heartbeat, RequestPlacementEntry
 
 
 class RManager:

@@ -1,16 +1,49 @@
-"""Cluster-level DistAttention scheduling — the paper's Algorithm 1.
+"""Cluster-level DistAttention scheduling — the paper's Algorithm 1,
+generalized to STRIPED span plans.
 
 Greedy debtor/creditor pairing driven by the Eq. 5-7 performance model:
 debtors = instances with small batch (big marginal gain from freeing
 memory), creditors = instances with low memory utilization. For each
-debtor (ascending batch size), take its longest request and move the
-modeled-optimal number of KV blocks to the emptiest creditor, repeating
-until no move improves modeled aggregate throughput.
+debtor (ascending batch size), take its longest request and place its
+movable prefix across one or MORE creditors: the planner searches the
+TOTAL moved-block count over the combined capacity of up to
+``max_stripes`` creditors, splits each candidate total greedily into
+per-(creditor, k-blocks) legs (emptiest creditor first), and scores the
+whole striped placement at once — per-leg marginal gains would miss
+moves that only pay off past one creditor's capacity, which is exactly
+the striping case. A request whose prefix exceeds any single creditor's
+free blocks thus stripes across several, turning the per-instance pools
+into the paper's cluster-wide memory pool. Each stripe is charged its
+per-step query/merge traffic (``InstancePerfModel.t_span_merge``) and
+credited its share of the parallel remote-slice speedup, so more
+creditors is a modeled trade-off, never free.
+
+Striped-plan protocol
+---------------------
+``plan()`` returns ``StripedMove``s: one source instance, one request,
+and an ordered list of ``SpanLeg``s (destination, whole blocks). The
+runtime must execute a plan all-or-nothing: reserve every leg on its
+destination first (try_move_kvcache, FCFS), roll every reservation back
+if any leg is refused, and only then copy pool rows + edit tables.
+Legs of one plan never repeat a destination and never over-commit a
+destination's free blocks as seen in the heartbeat views.
+
+Reclaim path
+------------
+A creditor that itself becomes memory-stressed (its utilization rises
+past the threshold, or it turns into a debtor while hosting others'
+spans) is relieved symmetrically: ``plan()`` emits reclaim
+``StripedMove``s that evict hosted spans BACK to their owner (when the
+owner has headroom again) or SIDEWAYS to other creditors, again
+all-or-nothing per plan.
+
+``plan()`` never mutates the caller's views — it works on copies, so a
+``GManager`` can re-plan from the same heartbeat state.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Tuple
 
 from repro.serving.perfmodel import InstancePerfModel
 
@@ -27,87 +60,190 @@ class InstanceView:
     offloaded_tokens: int = 0          # owner's KV held remotely
     hosted_tokens: int = 0             # others' KV held here
     alive: bool = True
+    # Owned requests' creditor spans: req_id -> {creditor_inst: blocks}.
+    # Populated by GManager._views from the cross-instance placement map;
+    # drives the per-span merge-cost and parallel-slice terms.
+    req_spans: Dict[int, Dict[int, int]] = field(default_factory=dict)
 
     @property
     def mem_util(self) -> float:
         return self.mem_blocks_used / max(1, self.mem_blocks_total)
 
+    @property
+    def free_blocks(self) -> int:
+        return self.mem_blocks_total - self.mem_blocks_used
+
+    def copy(self) -> "InstanceView":
+        return replace(
+            self, requests=dict(self.requests),
+            req_spans={r: dict(s) for r, s in self.req_spans.items()})
+
 
 @dataclass
-class MoveDecision:
-    req_id: int
-    src: int
+class SpanLeg:
+    """One stripe of a striped plan: whole blocks onto one destination."""
     dst: int
     num_blocks: int
 
 
+@dataclass
+class StripedMove:
+    """One all-or-nothing planned movement of a request's KV blocks.
+
+    ``kind`` is "offload" (debtor -> creditors) or "reclaim" (a stressed
+    creditor evicts a hosted span back to its owner / sideways).
+    """
+    req_id: int
+    src: int
+    legs: List[SpanLeg]
+    kind: str = "offload"
+
+    @property
+    def num_blocks(self) -> int:
+        return sum(leg.num_blocks for leg in self.legs)
+
+
+# Backwards-compatible alias: a single-leg plan is the old MoveDecision.
+MoveDecision = StripedMove
+
+
 class GreedyScheduler:
-    """Algorithm 1. Thresholds are the paper's beta^thres / U^thres."""
+    """Algorithm 1 with striped spans. Thresholds are the paper's
+    beta^thres / U^thres; ``max_stripes`` caps how many creditors one
+    request's plan may fan out to per round (1 = the paper's original
+    single-creditor greedy)."""
 
     def __init__(self, perf: InstancePerfModel, block_size: int,
                  beta_thres: int = 64, mem_util_thres: float = 0.8,
                  max_moves_per_round: int = 64,
-                 avg_new_req_len: int = 512):
+                 avg_new_req_len: int = 512,
+                 max_stripes: int = 8):
         self.perf = perf
         self.bs = block_size
         self.beta_thres = beta_thres
         self.mem_util_thres = mem_util_thres
         self.max_moves = max_moves_per_round
+        self.max_stripes = max_stripes
         # Typical length of a newly-admitted request — in deployment the
         # gManager estimates this from the recent arrival stream; it sets
         # how much batch growth a freed block buys (paper Fig. 7a slope).
         self.avg_new_len = avg_new_req_len
 
     # ------------------------------------------------------------------ #
+    def _span_stats(self, v: InstanceView) -> Tuple[int, int]:
+        """(span_entries, max single-creditor slice in tokens) of v."""
+        entries = sum(len(s) for s in v.req_spans.values())
+        mx = max((blk for s in v.req_spans.values()
+                  for blk in s.values()), default=0)
+        return entries, mx * self.bs
+
     def _inst_tps(self, v: InstanceView) -> float:
         lengths = [ln for (ln, _, own) in v.requests.values() if own]
+        entries, mx = self._span_stats(v)
         return self.perf.tps(v.batch_size, lengths,
                              offloaded_tokens=v.offloaded_tokens,
-                             hosted_tokens=v.hosted_tokens)
+                             hosted_tokens=v.hosted_tokens,
+                             span_entries=entries, max_span_tokens=mx)
 
-    def _pair_gain(self, d: InstanceView, c: InstanceView, req_id: int,
-                   k_blocks: int) -> float:
-        """Modeled aggregate TPS delta of moving k blocks d->c (Eq. 6/7).
-
-        Freed debtor memory admits waiting work: model batch growth as one
-        extra running request per freed block's worth of a median request
-        is too aggressive; we conservatively credit only the KV-time saved
-        plus batch growth when the debtor was memory-capped (batch grows
-        by freed_tokens / avg_len).
-        """
+    def _apply_leg(self, d: InstanceView, c: InstanceView, rid: int,
+                   k_blocks: int) -> None:
+        """Mutate working views as if k blocks of rid moved d -> c."""
         tok = k_blocks * self.bs
-        base = self._inst_tps(d) + self._inst_tps(c)
-        own_lens = [ln for (ln, _, o) in d.requests.values() if o]
-        avg_len = self.avg_new_len
-        # Batch growth saturates at the compute roofline (the paper's
-        # Fig. 2(b) plateau), not at the debtor-selection threshold.
+        d.offloaded_tokens += tok
+        d.mem_blocks_used -= k_blocks
+        ln, blk, own = d.requests[rid]
+        d.requests[rid] = (ln, blk - k_blocks, own)
+        spans = d.req_spans.setdefault(rid, {})
+        spans[c.inst_id] = spans.get(c.inst_id, 0) + k_blocks
+        c.hosted_tokens += tok
+        c.mem_blocks_used += k_blocks
+
+    def _creditor_cap(self, c: InstanceView) -> int:
+        """Blocks an offload may place on creditor ``c``: its free
+        blocks MINUS one block of headroom per running request, so the
+        creditor's own decode tails can keep growing until the next
+        planning round instead of hard-failing on pool exhaustion."""
+        return max(0, c.free_blocks - c.batch_size)
+
+    def _split_blocks(self, k: int,
+                      cands: List[InstanceView]) -> List[Tuple[int, int]]:
+        """Greedy split of k blocks over candidate creditors (emptiest
+        first, each filled to its headroom-capped capacity):
+        [(creditor_idx, n)]."""
+        splits = []
+        for i, c in enumerate(cands):
+            take = min(k, self._creditor_cap(c))
+            if take > 0:
+                splits.append((i, take))
+                k -= take
+            if k <= 0:
+                break
+        return splits
+
+    def _debtor_tps_after(self, d2: InstanceView, base_batch: int,
+                          moved_tok: int) -> float:
+        """Debtor TPS after a plan, crediting batch growth: freed memory
+        admits ~moved_tok / avg_new_len waiting requests, saturating at
+        the compute roofline (the paper's Fig. 2(b) plateau), not at the
+        debtor-selection threshold."""
         beta_sat = int(self.perf.hw.critical_intensity)
-        extra_batch = min(tok // avg_len,
-                          max(0, beta_sat - d.batch_size))
-        d_new = self.perf.tps(d.batch_size + extra_batch,
-                              own_lens + [avg_len] * extra_batch,
-                              offloaded_tokens=d.offloaded_tokens + tok,
-                              hosted_tokens=d.hosted_tokens)
-        c_lens = [ln for (ln, _, o) in c.requests.values() if o]
-        c_new = self.perf.tps(c.batch_size, c_lens,
-                              offloaded_tokens=c.offloaded_tokens,
-                              hosted_tokens=c.hosted_tokens + tok)
-        return (d_new + c_new) - base
+        extra = min(moved_tok // self.avg_new_len,
+                    max(0, beta_sat - base_batch))
+        own_lens = [ln for (ln, _, o) in d2.requests.values() if o]
+        entries, mx = self._span_stats(d2)
+        return self.perf.tps(d2.batch_size + extra,
+                             own_lens + [self.avg_new_len] * extra,
+                             offloaded_tokens=d2.offloaded_tokens,
+                             hosted_tokens=d2.hosted_tokens,
+                             span_entries=entries, max_span_tokens=mx)
+
+    def _striped_gain(self, d: InstanceView, cands: List[InstanceView],
+                      rid: int, splits: List[Tuple[int, int]]) -> float:
+        """Modeled aggregate TPS delta of applying a whole striped
+        placement (every leg at once, Eq. 6/7 plus span merge cost)."""
+        base = self._inst_tps(d) + sum(self._inst_tps(c) for c in cands)
+        d2 = d.copy()
+        c2s = {i: cands[i].copy() for i, _ in splits}
+        for i, n in splits:
+            self._apply_leg(d2, c2s[i], rid, n)
+        tok = sum(n for _, n in splits) * self.bs
+        d_new = self._debtor_tps_after(d2, d.batch_size, tok)
+        after = d_new + sum(self._inst_tps(c2s.get(i, c))
+                            for i, c in enumerate(cands))
+        return after - base
+
+    def modeled_aggregate_tps(self, views: List[InstanceView],
+                              moves: List[StripedMove]) -> float:
+        """Aggregate modeled cluster TPS (Eq. 7) after applying
+        ``moves`` to copies of ``views`` — the planner's own objective,
+        batch-growth credit included. Public so benchmarks and monitors
+        score plans with exactly the model the planner optimizes.
+        Only offload moves are applied (reclaim application needs the
+        owner-resolution bookkeeping internal to planning)."""
+        work = {v.inst_id: v.copy() for v in views}
+        moved_tok: Dict[int, int] = {}
+        base_batch = {v.inst_id: v.batch_size for v in views}
+        for mv in moves:
+            if mv.kind != "offload":
+                continue
+            for leg in mv.legs:
+                self._apply_leg(work[mv.src], work[leg.dst],
+                                mv.req_id, leg.num_blocks)
+                moved_tok[mv.src] = moved_tok.get(mv.src, 0) + \
+                    leg.num_blocks * self.bs
+        total = 0.0
+        for iid, v in work.items():
+            if iid in moved_tok:
+                total += self._debtor_tps_after(v, base_batch[iid],
+                                                moved_tok[iid])
+            else:
+                total += self._inst_tps(v)
+        return total
 
     # ------------------------------------------------------------------ #
-    def plan(self, views: List[InstanceView]) -> List[MoveDecision]:
-        views = [v for v in views if v.alive]
-        debtors = sorted([v for v in views
-                          if v.batch_size <= self.beta_thres],
-                         key=lambda v: v.batch_size)
-        creditors = sorted([v for v in views
-                            if v.mem_util <= self.mem_util_thres],
-                           key=lambda v: v.mem_util)
-        # An instance never acts as both (paper §5.2).
-        debtor_ids = {d.inst_id for d in debtors}
-        creditors = [c for c in creditors if c.inst_id not in debtor_ids]
-
-        moves: List[MoveDecision] = []
+    def _plan_offloads(self, debtors: List[InstanceView],
+                       creditors: List[InstanceView]) -> List[StripedMove]:
+        moves: List[StripedMove] = []
         for d in debtors:
             if not d.requests or len(moves) >= self.max_moves:
                 continue
@@ -116,33 +252,149 @@ class GreedyScheduler:
                      in d.requests.items() if own and blk > 1]
             if not owned:
                 continue
-            rid, rlen, rblocks = max(owned, key=lambda t: t[1])
+            rid, _, rblocks = max(owned, key=lambda t: t[1])
             block_budget = rblocks - 1          # keep the live tail local
-            for c in creditors:
-                if block_budget <= 0 or len(moves) >= self.max_moves:
-                    break
-                free_blocks = (c.mem_blocks_total - c.mem_blocks_used)
-                cap = min(block_budget, free_blocks)
-                if cap <= 0:
-                    continue
-                # Search k in (0, cap] for the best modeled gain.
-                best_k, best_gain = 0, 0.0
-                step = max(1, cap // 16)
-                for k in range(step, cap + 1, step):
-                    g = self._pair_gain(d, c, rid, k)
-                    if g > best_gain:
-                        best_k, best_gain = k, g
-                if best_k <= 0:
-                    break                        # no gain from this debtor
-                moves.append(MoveDecision(rid, d.inst_id, c.inst_id, best_k))
-                # Update the views so later decisions see the effect.
-                tok = best_k * self.bs
-                d.offloaded_tokens += tok
-                d.mem_blocks_used -= best_k
-                ln, blk, own = d.requests[rid]
-                d.requests[rid] = (ln, blk - best_k, own)
-                c.hosted_tokens += tok
-                c.mem_blocks_used += best_k
-                block_budget -= best_k
+            # Candidate creditors, emptiest first, capped at max_stripes
+            # (headroom-capped: never fill a creditor past what leaves
+            # its own running requests room to grow).
+            cands = sorted((c for c in creditors
+                            if self._creditor_cap(c) > 0),
+                           key=lambda v: v.mem_util)[:self.max_stripes]
+            cap_total = min(block_budget,
+                            sum(self._creditor_cap(c) for c in cands))
+            if cap_total <= 0:
+                continue
+            # Search the TOTAL moved-block count; each candidate total is
+            # split greedily into per-(creditor, k) legs and the whole
+            # striped placement is scored at once — per-leg marginal
+            # gains miss moves that only pay off past one creditor's
+            # capacity, which is exactly the striping case.
+            best_splits, best_gain = None, 0.0
+            step = max(1, cap_total // 16)
+            for k in range(step, cap_total + 1, step):
+                splits = self._split_blocks(k, cands)
+                g = self._striped_gain(d, cands, rid, splits)
+                if g > best_gain:
+                    best_splits, best_gain = splits, g
+            if not best_splits:
+                continue
+            for i, n in best_splits:
+                self._apply_leg(d, cands[i], rid, n)
+            moves.append(StripedMove(
+                rid, d.inst_id,
+                [SpanLeg(cands[i].inst_id, n) for i, n in best_splits]))
             creditors.sort(key=lambda v: v.mem_util)
         return moves
+
+    def _plan_reclaims(self, views: List[InstanceView],
+                       stressed: List[InstanceView],
+                       creditors: List[InstanceView]) -> List[StripedMove]:
+        """Symmetric path: a memory-stressed host evicts hosted spans
+        back to their owners (preferred) or sideways to calm creditors.
+
+        Eviction stops as soon as the host is back under the creditor
+        threshold — relief, not a purge — which together with the
+        stress trigger sitting ABOVE that threshold (see ``plan``)
+        gives the offload/reclaim pair a hysteresis band instead of a
+        copy ping-pong at the margin."""
+        by_id = {v.inst_id: v for v in views}
+        moves: List[StripedMove] = []
+        for h in stressed:
+            hosted = [(rid, blk) for rid, (ln, blk, own)
+                      in h.requests.items() if not own and blk > 0]
+            if not hosted:
+                continue
+            # Evict the smallest spans first: cheapest relief per move.
+            hosted.sort(key=lambda t: t[1])
+            for rid, blk in hosted:
+                if len(moves) >= self.max_moves or \
+                        h.mem_util <= self.mem_util_thres:
+                    break                # relieved — stop evicting
+                owner = next((v for v in views
+                              if v.requests.get(rid, (0, 0, False))[2]),
+                             None)
+                legs: List[SpanLeg] = []
+                remaining = blk
+                # Preferred: back to the owner if it has real headroom
+                # (it must stay under the creditor threshold afterwards).
+                if owner is not None and owner.inst_id != h.inst_id:
+                    room = owner.free_blocks
+                    after = (owner.mem_blocks_used + remaining) / \
+                        max(1, owner.mem_blocks_total)
+                    if room >= remaining and after <= self.mem_util_thres:
+                        legs.append(SpanLeg(owner.inst_id, remaining))
+                        remaining = 0
+                # Sideways: stripe what's left across calm creditors.
+                if remaining > 0:
+                    for c in sorted(creditors, key=lambda v: v.mem_util):
+                        if remaining <= 0 or \
+                                len(legs) >= self.max_stripes:
+                            break
+                        if c.inst_id == h.inst_id or \
+                                (owner is not None
+                                 and c.inst_id == owner.inst_id):
+                            continue
+                        take = min(remaining, self._creditor_cap(c))
+                        if take <= 0:
+                            continue
+                        legs.append(SpanLeg(c.inst_id, take))
+                        remaining -= take
+                if not legs or remaining > 0:
+                    continue                 # nowhere to put the span
+                # Apply to working views.
+                tok = blk * self.bs
+                h.hosted_tokens -= tok
+                h.mem_blocks_used -= blk
+                del h.requests[rid]
+                for leg in legs:
+                    dst = by_id[leg.dst]
+                    dst.mem_blocks_used += leg.num_blocks
+                    if owner is not None and leg.dst == owner.inst_id:
+                        owner.offloaded_tokens -= leg.num_blocks * self.bs
+                        ln, b0, own = owner.requests[rid]
+                        owner.requests[rid] = (ln, b0 + leg.num_blocks,
+                                               own)
+                    else:
+                        dst.hosted_tokens += leg.num_blocks * self.bs
+                    if owner is not None:
+                        spans = owner.req_spans.setdefault(rid, {})
+                        spans.pop(h.inst_id, None)
+                        if leg.dst != owner.inst_id:
+                            spans[leg.dst] = spans.get(leg.dst, 0) + \
+                                leg.num_blocks
+                moves.append(StripedMove(rid, h.inst_id, legs,
+                                         kind="reclaim"))
+        return moves
+
+    def plan(self, views: List[InstanceView]) -> List[StripedMove]:
+        # Work on copies: the caller's heartbeat-fed views stay pristine
+        # so the gManager can re-plan from the same state.
+        views = [v.copy() for v in views if v.alive]
+        # A debtor must have something to offload: an idle instance with
+        # no owned requests is a creditor candidate, not a debtor.
+        debtors = sorted([v for v in views
+                          if v.batch_size <= self.beta_thres
+                          and any(own for (_, _, own)
+                                  in v.requests.values())],
+                         key=lambda v: v.batch_size)
+        creditors = sorted([v for v in views
+                            if v.mem_util <= self.mem_util_thres],
+                           key=lambda v: v.mem_util)
+        # An instance never acts as both (paper §5.2).
+        debtor_ids = {d.inst_id for d in debtors}
+        creditors = [c for c in creditors if c.inst_id not in debtor_ids]
+        # Reclaim first: hosts that crossed the STRESS threshold while
+        # holding others' spans free their own headroom before new
+        # offloads are planned onto the remaining creditors. The stress
+        # trigger sits halfway between the creditor threshold and full:
+        # an instance stops being a creditor at mem_util_thres but is
+        # only force-relieved above this band (hysteresis against
+        # offload/reclaim ping-pong right at the threshold).
+        stress_thres = (self.mem_util_thres + 1.0) / 2
+        stressed = [v for v in views
+                    if v.hosted_tokens > 0
+                    and v.mem_util > stress_thres]
+        moves = self._plan_reclaims(views, stressed, creditors)
+        creditors.sort(key=lambda v: v.mem_util)
+        moves += self._plan_offloads(debtors, creditors)
+        return moves[:self.max_moves]

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,6 @@ from repro.models.attention import make_causal_core, qkv_project
 from repro.models.common import apply_ffn, apply_norm
 from repro.models.model import embed_tokens, unembed
 from repro.models.moe import apply_moe
-from repro.models.prefill import _ring_mask  # noqa: F401  (engine parity)
 
 wsc = jax.lax.with_sharding_constraint
 
@@ -99,8 +98,6 @@ def serve_decode_step(params, cfg: ModelConfig, layout: ServeLayout,
     Returns (next_tokens [R], new_pool_k, new_pool_v).
     """
     R = tokens.shape[0]
-    bspec = P(layout.batch_axes)
-    pspec = P(None, layout.pool_axes)
     scale = cfg.head_dim ** -0.5
 
     x = embed_tokens(params, cfg, tokens[:, None], None,

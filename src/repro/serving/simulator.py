@@ -12,17 +12,27 @@ performance model providing step times for TPU v5e. Three policies:
   "vllm-single"  — all chips in ONE wide-TP instance: everything fits,
                    but every layer pays the wide-TP all-reduce cost
                    (paper Fig. 1c) and f(beta) saturates per-chip.
+
+Striped spans: every request tracks its creditor placement exactly
+(``SimRequest.spans``: inst_id -> hosted tokens). Remote MicroAttention
+runs in PARALLEL across a request's creditors, so the debtor's remote
+bound is its slowest single-creditor slice — striping over more
+creditors shrinks it — while every (request, creditor) span entry pays
+per-step query/merge traffic (``InstancePerfModel.t_span_merge``).
+``striped=False`` restricts the proactive planner to one creditor per
+request (the original single-destination Algorithm 1) for A/B runs.
+The symmetric reclaim path evicts hosted spans off a memory-stressed
+creditor back to owners or sideways, exactly as the real scheduler does.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.distributed.hardware import V5E
 from repro.serving.perfmodel import InstancePerfModel
 
 
@@ -34,13 +44,18 @@ class SimRequest:
     output_len: int
     generated: int = 0
     inst: Optional[int] = None
-    offloaded: int = 0                # tokens hosted by creditors
+    # Exact creditor placement: inst_id -> tokens hosted there.
+    spans: Dict[int, int] = field(default_factory=dict)
     finish_time: Optional[float] = None
     failed: bool = False
 
     @property
     def length(self) -> int:
         return self.prompt_len + self.generated
+
+    @property
+    def offloaded(self) -> int:
+        return sum(self.spans.values())
 
 
 @dataclass
@@ -53,7 +68,6 @@ class SimInstance:
     clock: float = 0.0
     busy_until: float = 0.0
     max_batch: int = 512
-    n_creditors: int = 1              # set by the simulator each round
 
     @property
     def local_tokens(self) -> int:
@@ -66,21 +80,28 @@ class SimInstance:
 
     def step_time(self) -> float:
         beta = len(self.running)
-        if beta == 0 and self.hosted_tokens == 0:
+        if beta == 0:
+            # Hosted-span MicroAttention cost is charged on the debtor
+            # side (its coverage-bounded slice time); an instance with
+            # no running requests just ticks.
             return 1e-3
         lens = [r.length for r in self.running]
         off = sum(r.offloaded for r in self.running)
         t = self.perf.t_layer(beta, lens)
-        per_chip_bw = self.perf.hw.hbm_bw * self.perf.chips
-        off_t = off * self.perf.kv_bytes_per_token_layer() / per_chip_bw
+        per_tok = self.perf.kv_bytes_per_token_layer() / \
+            (self.perf.hw.hbm_bw * self.perf.chips)
+        off_t = off * per_tok
         # Remote MicroAttention runs in PARALLEL across creditors — the
-        # debtor waits only for the slowest slice (DistAttention's
-        # bandwidth aggregation), still bounded below by local compute
-        # (paper Fig. 6a coverage).
-        slice_t = off_t / max(1, self.n_creditors)
+        # debtor waits only for its slowest single-creditor slice
+        # (DistAttention's bandwidth aggregation), still bounded below
+        # by local compute (paper Fig. 6a coverage).
+        slice_t = max((max(r.spans.values(), default=0)
+                       for r in self.running), default=0) * per_tok
         t = max(t - off_t, slice_t)
-        t += self.hosted_tokens * self.perf.kv_bytes_per_token_layer() / \
-            per_chip_bw
+        t += self.hosted_tokens * per_tok
+        # Per-(request, creditor) span entries pay query/merge traffic.
+        entries = sum(len(r.spans) for r in self.running)
+        t += self.perf.t_span_merge(entries)
         return self.perf.cfg.num_layers * max(t, 1e-9)
 
 
@@ -88,7 +109,9 @@ class ClusterSimulator:
     def __init__(self, cfg: ModelConfig, *, policy: str,
                  n_instances: int, chips_per_instance: int,
                  schedule_every: float = 0.25,
-                 avg_new_len: int = 512):
+                 avg_new_len: int = 512,
+                 striped: bool = True,
+                 max_stripes: int = 8):
         self.cfg = cfg
         self.policy = policy
         self.instances: List[SimInstance] = []
@@ -102,10 +125,21 @@ class ClusterSimulator:
         self.schedule_every = schedule_every
         self.clock = 0.0
         self.avg_new_len = avg_new_len
+        self.striped = striped
+        self.max_stripes = max_stripes if striped else 1
         self._next_sched = schedule_every
         self._requeue: List[SimRequest] = []
 
     # --------------------------------------------------------------- #
+    def _host(self, req: SimRequest, donor: SimInstance, tok: int):
+        donor.hosted_tokens += tok
+        req.spans[donor.inst_id] = req.spans.get(donor.inst_id, 0) + tok
+
+    def _release_spans(self, req: SimRequest):
+        for iid, tok in req.spans.items():
+            self.instances[iid].hosted_tokens -= tok
+        req.spans = {}
+
     def _admit(self, req: SimRequest) -> bool:
         insts = sorted(self.instances, key=lambda x: -x.free_tokens)
         for inst in insts:
@@ -116,18 +150,23 @@ class ClusterSimulator:
                 req.inst = inst.inst_id
                 return True
             if self.policy == "infinite":
-                # Spill: local tail + remote prefix across creditors.
+                # Spill: local tail + remote prefix striped across up to
+                # ``max_stripes`` creditors (reserve-then-stream at
+                # admission; ONE creditor when striped=False — the
+                # single-destination baseline cannot admit a prompt no
+                # single creditor can hold).
                 need = req.prompt_len - inst.free_tokens
-                donors = [d for d in self.instances if d is not inst
-                          and d.free_tokens > 0]
+                donors = sorted((d for d in self.instances
+                                 if d is not inst and d.free_tokens > 0),
+                                key=lambda d: -d.free_tokens)
+                donors = donors[:self.max_stripes]
                 avail = sum(d.free_tokens for d in donors)
                 if avail >= need and inst.free_tokens > 0:
                     req.inst = inst.inst_id
                     inst.running.append(req)
                     for d in donors:
                         take = min(d.free_tokens, need)
-                        d.hosted_tokens += take
-                        req.offloaded += take
+                        self._host(req, d, take)
                         need -= take
                         if need <= 0:
                             break
@@ -137,14 +176,7 @@ class ClusterSimulator:
     def _preempt(self, inst: SimInstance, req: SimRequest, t: float):
         """vLLM-style preemption: drop KV, requeue (recompute on resume)."""
         inst.running.remove(req)
-        freed = req.offloaded
-        for d in self.instances:
-            if freed <= 0:
-                break
-            take = min(d.hosted_tokens, freed)
-            d.hosted_tokens -= take
-            freed -= take
-        req.offloaded = 0
+        self._release_spans(req)
         req.inst = None
         req.arrival = t                     # back of the queue
         self._requeue.append(req)
@@ -160,25 +192,36 @@ class ClusterSimulator:
             donors = sorted((d for d in self.instances if d is not inst
                              and d.free_tokens > 256),
                             key=lambda d: -d.free_tokens)
+            # The single-destination baseline may only grow the span a
+            # victim already has (or open its first); striped mode opens
+            # up to max_stripes spans per victim.
+            if victim.spans:
+                allowed = [d for d in donors
+                           if d.inst_id in victim.spans
+                           or len(victim.spans) < self.max_stripes]
+            else:
+                allowed = donors
             chunk = 0
-            if donors:
-                chunk = min(-inst.free_tokens + 256, donors[0].free_tokens,
+            if allowed:
+                chunk = min(-inst.free_tokens + 256,
+                            allowed[0].free_tokens,
                             victim.length - victim.offloaded - 256)
             if chunk <= 0:
                 self._preempt(inst, victim, t)
                 continue
-            donors[0].hosted_tokens += chunk
-            victim.offloaded += chunk
+            self._host(victim, allowed[0], chunk)
 
     def _proactive(self):
-        """Algorithm-1-flavored balancing at simulator granularity."""
+        """Algorithm-1 at simulator granularity, striped: the longest
+        request of each debtor is placed across creditors, respecting
+        the PER-REQUEST ``max_stripes`` span cap — a request may only
+        grow spans it already has, or open new ones while it is under
+        the cap (so ``striped=False`` is genuinely single-destination
+        for each request's lifetime, not per planning round)."""
         debtors = sorted((i for i in self.instances
                           if 0 < len(i.running) <= 8
                           or i.free_tokens < i.kv_capacity_tokens // 10),
                          key=lambda i: len(i.running))
-        creditors = sorted((i for i in self.instances
-                            if i.free_tokens > i.kv_capacity_tokens // 3),
-                           key=lambda i: -i.free_tokens)
         for d in debtors:
             if not d.running:
                 continue
@@ -186,13 +229,52 @@ class ClusterSimulator:
             movable = longest.length - longest.offloaded - 256
             if movable < 1024:
                 continue
+            creditors = sorted(
+                (i for i in self.instances if i is not d
+                 and i.free_tokens > i.kv_capacity_tokens // 3),
+                key=lambda i: -i.free_tokens)
             for c in creditors:
-                if c is d or c.free_tokens < 1024:
+                if movable < 1024:
+                    break
+                if c.free_tokens < 1024:
+                    continue
+                if c.inst_id not in longest.spans and \
+                        len(longest.spans) >= self.max_stripes:
                     continue
                 take = min(movable, c.free_tokens // 2)
-                c.hosted_tokens += take
-                longest.offloaded += take
-                break
+                self._host(longest, c, take)
+                movable -= take
+
+    def _reclaim(self):
+        """Symmetric path: a creditor that became memory-stressed evicts
+        hosted spans back to owners or sideways to calm instances."""
+        for h in self.instances:
+            if h.hosted_tokens <= 0 or \
+                    h.free_tokens > h.kv_capacity_tokens // 20:
+                continue
+            victims = [(r, o) for o in self.instances for r in o.running
+                       if r.spans.get(h.inst_id, 0) > 0]
+            for req, owner in victims:
+                tok = req.spans.get(h.inst_id, 0)
+                # Back to the owner when it has real headroom, else
+                # sideways to the calmest other instance.
+                dst = None
+                if owner.free_tokens >= tok + 1024:
+                    dst = owner
+                else:
+                    calm = sorted((i for i in self.instances
+                                   if i is not h and i is not owner
+                                   and i.free_tokens >= tok + 1024),
+                                  key=lambda i: -i.free_tokens)
+                    dst = calm[0] if calm else None
+                if dst is None:
+                    continue
+                h.hosted_tokens -= tok
+                del req.spans[h.inst_id]
+                if dst is not owner:
+                    self._host(req, dst, tok)
+                if h.free_tokens > h.kv_capacity_tokens // 20:
+                    break
 
     # --------------------------------------------------------------- #
     def run(self, requests: List[SimRequest], *, horizon: float = 600.0
@@ -200,7 +282,6 @@ class ClusterSimulator:
         """Event-driven: every instance advances on its OWN clock (an
         instance hosting heavy MicroAttention slows only itself, as in
         the real asynchronous cluster)."""
-        import heapq
         pending = sorted(requests, key=lambda r: r.arrival)
         tokens_done = 0
         heap = [(0.0, i.inst_id) for i in self.instances]
@@ -216,9 +297,19 @@ class ClusterSimulator:
             # Admit arrivals up to this time.
             while pending and pending[0].arrival <= t:
                 req = pending[0]
-                if self.policy != "infinite" and \
-                        req.prompt_len + req.output_len > \
-                        self.instances[0].kv_capacity_tokens:
+                cap = self.instances[0].kv_capacity_tokens
+                if self.policy != "infinite":
+                    feasible = req.prompt_len + req.output_len <= cap
+                else:
+                    # Pooled feasibility: the local tail plus at most
+                    # ``max_stripes`` creditor spans. A request no
+                    # placement can EVER hold is rejected, not left to
+                    # block the queue head forever.
+                    pool_span = min(1 + self.max_stripes,
+                                    len(self.instances))
+                    feasible = req.prompt_len + req.output_len <= \
+                        cap * pool_span
+                if not feasible:
                     req.failed = True
                     self.failed.append(req)
                     pending.pop(0)
@@ -229,6 +320,7 @@ class ClusterSimulator:
                     break                        # head-of-line wait
 
             if self.policy == "infinite" and t >= self._next_sched:
+                self._reclaim()
                 self._proactive()
                 self._next_sched = t + self.schedule_every
 
@@ -240,8 +332,6 @@ class ClusterSimulator:
                 continue
 
             # One decode step for THIS instance.
-            inst.n_creditors = max(1, sum(1 for d in self.instances
-                                          if d.hosted_tokens > 0))
             dt = inst.step_time()
             for r in list(inst.running):
                 r.generated += 1
@@ -249,13 +339,7 @@ class ClusterSimulator:
                 if r.generated >= r.output_len:
                     r.finish_time = t + dt
                     inst.running.remove(r)
-                    freed = r.offloaded
-                    for d in self.instances:
-                        if freed <= 0:
-                            break
-                        take = min(d.hosted_tokens, freed)
-                        d.hosted_tokens -= take
-                        freed -= take
+                    self._release_spans(r)
                     self.finished.append(r)
             if self.policy == "infinite":
                 self._spill(inst, t)
@@ -278,10 +362,13 @@ class ClusterSimulator:
 
 
 def make_policy_cluster(cfg: ModelConfig, policy: str, total_chips: int,
-                        chips_per_instance: int) -> ClusterSimulator:
+                        chips_per_instance: int, *,
+                        striped: bool = True) -> ClusterSimulator:
     if policy == "vllm-single":
         return ClusterSimulator(cfg, policy=policy, n_instances=1,
-                                chips_per_instance=total_chips)
+                                chips_per_instance=total_chips,
+                                striped=striped)
     n = total_chips // chips_per_instance
     return ClusterSimulator(cfg, policy=policy, n_instances=n,
-                            chips_per_instance=chips_per_instance)
+                            chips_per_instance=chips_per_instance,
+                            striped=striped)

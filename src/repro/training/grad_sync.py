@@ -8,13 +8,12 @@ dry-run and §Perf use to account the savings.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.training.compression import dequantize_int8, quantize_int8
+from repro.training.compression import quantize_int8
 
 
 def _sync_one(g, axis_name):

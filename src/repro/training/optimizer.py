@@ -7,7 +7,7 @@ parameter, over the ``data`` axis when FSDP is on).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,8 @@ class AdamWState(NamedTuple):
 
 def init_adamw(params, cfg: AdamWConfig) -> AdamWState:
     dt = jnp.dtype(cfg.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
     return AdamWState(step=jnp.zeros((), jnp.int32),
                       m=jax.tree.map(zeros, params),
                       v=jax.tree.map(zeros, params))

@@ -8,8 +8,8 @@ by the multi-pod lowering).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, NamedTuple, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,6 @@ def train_step(state: TrainState, tokens, mask, *, cfg: ModelConfig,
         (grads, loss_sum), _ = jax.lax.scan(acc_body, (zeros, 0.0), xs)
         grads = jax.tree.map(lambda g: g / n, grads)
         loss = loss_sum / n
-        metrics = {}
 
     ef = state.ef
     if tcfg.grad_compression:

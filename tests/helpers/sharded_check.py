@@ -17,8 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
 from repro.configs import get_smoke_config
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import prefill
-from repro.serving.sharded_step import (ServeLayout, serve_decode_step,
-                                        serve_decode_step_opt)
+from repro.serving.sharded_step import ServeLayout, serve_decode_step
 from repro.distributed.sharding import param_specs, validate_divisibility
 
 

@@ -101,7 +101,6 @@ def test_paged_micro_attention_matches_ref(R, NB, bs, K, G, D, MB, dtype):
 def test_paged_partial_merges_to_full_attention():
     """Kernel partials from two disjoint pools == full attention (Eq. 2+3)."""
     from repro.core.online_softmax import combine, finalize
-    rng = np.random.default_rng(1)
     key = jax.random.PRNGKey(9)
     R, bs, K, G, D = 2, 8, 2, 2, 16
     H = K * G

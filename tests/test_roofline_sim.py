@@ -1,6 +1,4 @@
 """Roofline HLO parsing, trace generator fidelity, cluster simulator."""
-import numpy as np
-import pytest
 
 from benchmarks.traces import TRACE_SPECS, gen_trace, trace_stats
 from repro.configs import get_config
@@ -83,7 +81,6 @@ def test_simulator_infinite_serves_oversized_request():
     cfg = get_config("mistral-nemo-12b")
     from repro.serving.perfmodel import InstancePerfModel
     cap = InstancePerfModel(cfg, chips=2).kv_tokens_capacity()
-    big = [SimRequest(0, 0.0, int(cap * 1.5), 32)]
     inf = make_policy_cluster(cfg, "infinite", 8, 2)
     out_inf = inf.run([SimRequest(0, 0.0, int(cap * 1.5), 32)],
                       horizon=300.0)

@@ -1,0 +1,281 @@
+"""Striped span scheduling (multi-creditor Algorithm 1).
+
+Covers the ISSUE-3 acceptance criteria: (a) end-to-end, a request whose
+movable prefix exceeds ANY single creditor's free blocks is striped
+across >= 2 creditors by the decode-time planner with token-identical
+greedy output vs the single-pool oracle (including the symmetric
+reclaim path firing mid-run), (b) a striped plan whose legs cannot all
+be reserved is rejected with allocator state restored exactly, and
+(c) hypothesis property tests: plans never over-commit a creditor's
+free blocks, debtor/creditor roles stay disjoint, and all-or-nothing
+reservation rollback is exact.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.serving import InstancePerfModel
+from repro.serving.protocol import MoveKVCache, MoveLeg, MoveResult
+from repro.serving.rmanager import RManager
+from repro.serving.scheduler import GreedyScheduler, InstanceView
+from repro.serving.cluster import reserve_all_or_nothing
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------------ #
+# End-to-end: decode-time striping across >= 2 creditors, exact decode
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", [7])
+def test_decode_time_striping_across_two_creditors_exact(seed):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import decode_step, init_params
+    from repro.models.prefill import prefill
+    from repro.serving import Cluster, Request, RequestState, SamplingParams
+
+    # float32 so LSE-merge rounding cannot flip near-tie argmaxes of the
+    # random-init smoke model (the comparison is token-exactness, not
+    # numerics — the bf16 paths are oracle-checked in test_paged_prefill).
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    T, n_new = 40, 16
+    prompt = list(rng.integers(0, cfg.vocab_size, T))
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens, max_len=T + n_new + 2)
+    ref = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([ref[-1]], jnp.int32))
+        ref.append(int(jnp.argmax(lg[0])))
+
+    # alpha_hop=0: at smoke scale the per-span hop latency otherwise
+    # dwarfs the microscopic KV times and the model (correctly) refuses
+    # to stripe; avg_new_req_len=4 makes freed blocks admit modeled work.
+    perf = InstancePerfModel(cfg, alpha_hop=0.0)
+    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=64,
+                 pool_blocks=16, block_size=4, schedule_every=4,
+                 avg_new_req_len=4, perf=perf)
+    executed = []
+    orig_exec = cl._execute_move
+
+    def spy(mv):
+        res = orig_exec(mv)
+        executed.append((mv.kind, [(leg.dst_inst, leg.num_blocks)
+                                   for leg in mv.legs], res))
+        return res
+    cl._execute_move = spy
+
+    req = Request(prompt=prompt,
+                  sampling=SamplingParams(max_new_tokens=n_new))
+    cl.submit(req)
+    cl.step()                                  # admission (local only)
+    owner_id = next(i for i, e in cl.engines.items() if req in e.running)
+    owner = cl.engines[owner_id]
+    assert not owner.remote_insts.get(req.req_id), \
+        "prompt must be admitted fully locally (decode-time test)"
+    # Ballast shrinks each creditor to 4 free blocks: the request's
+    # movable prefix (>= 9 full blocks) exceeds ANY single creditor.
+    for i, e in cl.engines.items():
+        if i != owner_id:
+            assert e.rmanager.pool.append_tokens(900 + i, 12 * 4)
+            free = e.rmanager.pool.alloc.free_count
+            assert free * 4 < owner.local_tokens(req) - 4
+    cl.step()
+    cl.step()
+    # The planner's view now warrants a SINGLE multi-leg striped plan.
+    plans = [mv for mv in cl.gmanager.plan_moves()
+             if mv.req_id == req.req_id]
+    assert plans and len(plans[0].legs) >= 2, \
+        f"expected a >=2-leg striped plan, got {plans}"
+
+    cl.run_until_done(max_steps=300)
+    assert req.state == RequestState.FINISHED
+    assert req.output == ref, "striped decode diverged from oracle"
+    offloads = [e for e in executed
+                if e[0] == "offload" and e[2] == MoveResult.OK]
+    assert any(len(legs) >= 2 for _, legs, _ in offloads), \
+        "no striped (multi-leg) offload was executed"
+    dsts = {d for _, legs, _ in offloads for d, _ in legs}
+    assert len(dsts) >= 2, "prefix did not stripe across >=2 creditors"
+    # The creditors became memory-stressed hosting the span, so the
+    # symmetric reclaim path must also have fired — and stayed exact.
+    assert any(e[0] == "reclaim" and e[2] == MoveResult.OK
+               for e in executed), "reclaim path never executed"
+    for e in cl.engines.values():
+        assert e.rmanager.pool.alloc.reserved == 0
+
+
+# ------------------------------------------------------------------ #
+# All-or-nothing: a stripe with an unreservable leg rolls back exactly
+# ------------------------------------------------------------------ #
+def test_striped_move_rejected_leg_rolls_back_exactly():
+    import jax
+
+    from repro.models.model import init_params
+    from repro.serving import Cluster, Request, SamplingParams
+
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=64,
+                 pool_blocks=16, block_size=4, schedule_every=10 ** 9)
+    req = Request(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
+                  sampling=SamplingParams(max_new_tokens=4))
+    cl.submit(req)
+    cl.step()
+    owner_id = next(i for i, e in cl.engines.items() if req in e.running)
+    others = [i for i in cl.engines if i != owner_id]
+    # Second creditor has only 2 free blocks: its 4-block leg must fail
+    # AND the first creditor's already-made reservation must be undone.
+    cl.engines[others[1]].rmanager.pool.append_tokens(901, 14 * 4)
+
+    def snapshot():
+        out = {}
+        for i, e in cl.engines.items():
+            a = e.rmanager.pool.alloc
+            out[i] = (a.used_count, a.reserved, sorted(a._free),
+                      {r: list(rb.blocks) for r, rb
+                       in e.rmanager.pool.requests.items()})
+        return out
+
+    before = snapshot()
+    res = cl._execute_move(MoveKVCache(
+        req.req_id, owner_id,
+        [MoveLeg(others[0], 4), MoveLeg(others[1], 4)]))
+    assert res == MoveResult.REJECTED
+    assert snapshot() == before, \
+        "failed stripe did not restore allocator state exactly"
+
+
+# ------------------------------------------------------------------ #
+# Property tests (hypothesis)
+# ------------------------------------------------------------------ #
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_plans_never_overcommit_and_roles_disjoint(data):
+        cfg = get_config("olmo-1b")
+        sched = GreedyScheduler(InstancePerfModel(cfg), block_size=16,
+                                beta_thres=data.draw(
+                                    st.integers(0, 32), label="beta"),
+                                mem_util_thres=data.draw(
+                                    st.floats(0.3, 0.95), label="util"),
+                                max_stripes=data.draw(
+                                    st.integers(1, 6), label="stripes"),
+                                avg_new_req_len=data.draw(
+                                    st.sampled_from([16, 64, 512]),
+                                    label="avg_len"))
+        n = data.draw(st.integers(2, 6), label="n")
+        views = []
+        for i in range(n):
+            total = data.draw(st.integers(8, 256), label=f"total{i}")
+            used = data.draw(st.integers(0, total), label=f"used{i}")
+            reqs = {}
+            blocks_left = used
+            for j in range(data.draw(st.integers(0, 3), label=f"nr{i}")):
+                if blocks_left <= 0:
+                    break
+                blk = data.draw(st.integers(1, blocks_left),
+                                label=f"blk{i}_{j}")
+                own = data.draw(st.booleans(), label=f"own{i}_{j}")
+                reqs[i * 100 + j] = (blk * 16, blk, own)
+                blocks_left -= blk
+            hosted = sum(b for (_, b, own) in reqs.values()
+                         if not own) * 16
+            views.append(InstanceView(
+                inst_id=i,
+                batch_size=data.draw(st.integers(0, 48), label=f"b{i}"),
+                mem_blocks_total=total, mem_blocks_used=used,
+                requests=reqs, hosted_tokens=hosted))
+        free_before = {v.inst_id: v.free_blocks for v in views}
+        import copy
+        views_before = copy.deepcopy(views)
+        moves = sched.plan(views)
+        # plan() never mutates its input views.
+        assert views == views_before
+        # No creditor is committed past its free blocks (across ALL
+        # plans of the round combined), debtors keep >= 1 block of every
+        # offloaded request, and no plan repeats a destination.
+        incoming = {}
+        for m in moves:
+            dsts = [leg.dst for leg in m.legs]
+            assert len(dsts) == len(set(dsts)), "plan repeats a creditor"
+            assert m.src not in dsts
+            for leg in m.legs:
+                assert leg.num_blocks > 0
+                incoming[leg.dst] = incoming.get(leg.dst, 0) \
+                    + leg.num_blocks
+        freed = {}
+        for m in moves:
+            if m.kind == "reclaim":
+                freed[m.src] = freed.get(m.src, 0) + m.num_blocks
+        for dst, n_in in incoming.items():
+            assert n_in <= free_before[dst] + freed.get(dst, 0), \
+                f"creditor {dst} over-committed"
+        # Offload sources and offload destinations are disjoint roles.
+        srcs = {m.src for m in moves if m.kind == "offload"}
+        off_dsts = {leg.dst for m in moves if m.kind == "offload"
+                    for leg in m.legs}
+        assert not (srcs & off_dsts)
+        # An offload never moves a request's entire span (tail stays).
+        by_id = {v.inst_id: v for v in views}
+        for m in moves:
+            if m.kind == "offload":
+                _, blk, _ = by_id[m.src].requests[m.req_id]
+                assert m.num_blocks < blk
+
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_all_or_nothing_reservation_rollback_exact(data):
+        """reserve_all_or_nothing: on ANY refused leg the allocators of
+        every destination are restored exactly (used, reserved, free)."""
+        n_dst = data.draw(st.integers(1, 4), label="n_dst")
+        rms = []
+        for i in range(n_dst):
+            rm = RManager(i, num_blocks=data.draw(st.integers(1, 16),
+                                                  label=f"nb{i}"),
+                          block_size=4)
+            fill = data.draw(
+                st.integers(0, rm.pool.alloc.num_blocks), label=f"f{i}")
+            if fill:
+                rm.pool.append_tokens(500 + i, fill * 4)
+            pre = data.draw(
+                st.integers(0, 3), label=f"pre{i}")
+            rm.pool.alloc.reserved = min(pre, rm.pool.alloc.free_count)
+            rms.append(rm)
+        legs = [(rms[data.draw(st.integers(0, n_dst - 1),
+                               label=f"leg_dst{j}")],
+                 data.draw(st.integers(1, 8), label=f"leg_n{j}"))
+                for j in range(data.draw(st.integers(1, 5),
+                                         label="n_legs"))]
+
+        def state():
+            return [(rm.pool.alloc.used_count, rm.pool.alloc.reserved,
+                     sorted(rm.pool.alloc._free)) for rm in rms]
+
+        before = state()
+        ok = reserve_all_or_nothing(req_id=1, legs=legs)
+        if ok:
+            # Every leg reserved; cancelling them all restores state.
+            for rm, n in legs:
+                rm.cancel_move_in(n)
+            assert state() == before
+        else:
+            assert state() == before, \
+                "refused stripe left reservations behind"
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_striped_property_suite_requires_hypothesis():
+        """Visible placeholder: the over-commit / disjoint-roles /
+        rollback property tests above were not collected."""
