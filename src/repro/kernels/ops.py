@@ -14,6 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_prefill import flash_prefill_kernel
 from repro.kernels.micro_attn_decode import paged_micro_attention_kernel
+from repro.kernels.micro_attn_prefill import \
+    paged_prefill_micro_attention_kernel
 
 
 def _on_tpu() -> bool:
@@ -70,6 +72,78 @@ def paged_micro_attention_jnp(q, pool_k, pool_v, table, tail_len, *,
     k, v = gather_local_kv(pool_k, pool_v, table)
     mask = local_mask_from_table(table, bs, tail_len)
     return micro_attention_decode(q, k, v, mask, scale=scale)
+
+
+def paged_prefill_attention_jnp(q, pool_k, pool_v, table, tail_len, *,
+                                scale=None):
+    """Pure-jnp prefill-chunk paged partial — the gather fallback.
+
+    All C chunk queries share the rank's ONE table, so the prefix rows
+    are gathered once ([S, K, D]) and a shared-KV partial runs —
+    transient stays O(prefix), never O(chunk x prefix). Fuses into
+    surrounding jit code (the streaming-prefill scan) on any backend.
+    """
+    from repro.core.distattn import gather_local_kv, local_mask_from_table
+    from repro.core.online_softmax import micro_attention_prefill
+    bs = pool_k.shape[1]
+    k, v = gather_local_kv(pool_k, pool_v, table[None])    # [1, S, K, D]
+    valid = local_mask_from_table(table[None], bs, tail_len[None])
+    # Every addressed token precedes every chunk query: q_pos=1 > kv_pos=0
+    # keeps the causal test vacuously true for all (query, kv) pairs.
+    q_pos = jnp.ones((1, q.shape[0]), jnp.int32)
+    kv_pos = jnp.zeros_like(valid, jnp.int32)
+    o, m, l = micro_attention_prefill(q[None], k, v, q_pos, kv_pos, valid,
+                                      scale=scale)
+    return o[0], m[0], l[0]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "backend"))
+def paged_prefill_attention(q, pool_k, pool_v, table, tail_len, *,
+                            scale=None, interpret=None, backend=None):
+    """Paged DistAttention MicroAttention partial (prefill chunk).
+
+    q [C,H,D] — one chunk of query rows, all positioned AFTER the
+    addressed prefix; pool_k/v [NB,bs,K,D]; table [MB] (-1 padded, seq
+    order) shared by every query; tail_len [] valid tokens in the
+    prefix's final block. ``backend``: "pallas" (kernel; interpret mode
+    off-TPU) or "jnp" (pure gather fallback); None picks pallas on TPU
+    and jnp elsewhere. Returns (o [C,H,D] f32 unnormalized, m [C,H] f32,
+    l [C,H] f32) — LSE-mergeable with the chunk-internal causal partial.
+    """
+    C, H, D = q.shape
+    NB, bs, K, _ = pool_k.shape
+    if scale is None:
+        scale = D ** -0.5
+    table = table.astype(jnp.int32)
+    tail_len = tail_len.astype(jnp.int32)
+    if backend is None:
+        backend = "pallas" if (_on_tpu() or interpret is not None) else "jnp"
+    if backend == "jnp":
+        return paged_prefill_attention_jnp(q, pool_k, pool_v, table,
+                                           tail_len, scale=scale)
+    if interpret is None:
+        interpret = not _on_tpu()
+    G = H // K
+    # kv-head-major query layout: each head group is a contiguous
+    # [C*G, D] slab the kernel feeds to the MXU; rows padded to a
+    # sublane multiple (padded rows compute garbage, sliced off below).
+    qr = q.reshape(C, K, G, D).transpose(1, 0, 2, 3).reshape(K, C * G, D)
+    qr = _pad_axis(qr, 1, 8)
+    CGp = qr.shape[1]
+    qp = _pad_last(qr.reshape(K * CGp, D), 128)
+    kp = _pad_last(pool_k, 128)
+    vp = _pad_last(pool_v, 128)
+    nblk = jnp.sum(table >= 0)[None].astype(jnp.int32)
+    o, m, l = paged_prefill_micro_attention_kernel(
+        qp, kp, vp, table, nblk, tail_len[None], num_kv_heads=K,
+        scale=scale, interpret=interpret)
+    o = o.reshape(K, CGp, -1)[:, :C * G, :D]
+    m = m.reshape(K, CGp)[:, :C * G]
+    l = l.reshape(K, CGp)[:, :C * G]
+    o = o.reshape(K, C, G, D).transpose(1, 0, 2, 3).reshape(C, H, D)
+    m = m.reshape(K, C, G).transpose(1, 0, 2).reshape(C, H)
+    l = l.reshape(K, C, G).transpose(1, 0, 2).reshape(C, H)
+    return o, m, l
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "interpret", "backend"))

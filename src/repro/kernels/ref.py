@@ -28,6 +28,48 @@ def flash_prefill_ref(q, k, v, *, scale=None, window=0):
     return o.reshape(B, S, H, D).astype(q.dtype)
 
 
+def paged_prefill_micro_attention_ref(q, pool_k, pool_v, table, nblk,
+                                      last_len, *, scale=None):
+    """Prefill-chunk MicroAttention over a local paged pool.
+
+    q:        [C, H, D]       chunk queries (positions all >= the prefix)
+    pool_k/v: [NB, bs, K, D]  this rank's block pool
+    table:    [MB] int32      the request's block ids, -1 padded — ONE
+                              table shared by every chunk query, covering
+                              exactly the already-written prefix [0, t0)
+    nblk:     [] int32        number of valid table slots
+    last_len: [] int32        valid tokens in the prefix's final block
+    Returns (o [C,H,D] f32 unnormalized, m [C,H] f32, l [C,H] f32).
+    No causal mask: every addressed token precedes every chunk query.
+    """
+    C, H, D = q.shape
+    NB, bs, K, _ = pool_k.shape
+    MB = table.shape[0]
+    if scale is None:
+        scale = D ** -0.5
+    safe = jnp.maximum(table, 0)
+    k = pool_k[safe].reshape(MB * bs, K, D)
+    v = pool_v[safe].reshape(MB * bs, K, D)
+    j = jnp.arange(MB)
+    is_last = (j == nblk - 1)[:, None]
+    within = jnp.arange(bs)[None, :]
+    tok_ok = jnp.where(is_last, within < last_len, True)
+    mask = ((table >= 0)[:, None] & tok_ok).reshape(MB * bs)
+
+    G = H // K
+    qc = q.astype(k.dtype).reshape(C, K, G, D)
+    s = jnp.einsum("ckgd,skd->ckgs", qc, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - jnp.where(jnp.isneginf(m), 0.0, m)[..., None])
+    p = jnp.where(mask[None, None, None, :], p, 0.0)
+    o = jnp.einsum("ckgs,skd->ckgd", p.astype(k.dtype), v,
+                   preferred_element_type=jnp.float32)
+    l = jnp.sum(p, axis=-1)
+    return (o.reshape(C, H, D), m.reshape(C, H), l.reshape(C, H))
+
+
 def paged_micro_attention_ref(q, pool_k, pool_v, table, nblk, last_len,
                               *, scale=None):
     """DistAttention MicroAttention over a local paged pool (decode).

@@ -402,7 +402,8 @@ def _paged_attn_decode(lp, x, lens, pk, pv, rks, rvs, tables, tails,
     return out, pk, pv
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                   donate_argnames=("pool_k", "pool_v"))
 def _decode_step_paged_jit(params, tokens, lens, pool_k, pool_v,
                            remote_k, remote_v, tables, tails,
                            write_block, write_off, *, cfg, backend):
@@ -442,9 +443,12 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, lens,
     """Fixed-shape paged DistAttention decode (dense/moe serving path).
 
     tokens/lens: [B] (lens = absolute position of the new token);
-    pool_k/pool_v: [L, NB, bs, K, hd] — the owner rank's pool (returned
-    updated; KV for the new token is written into the request's tail
-    block before attention so the token attends to itself);
+    pool_k/pool_v: [L, NB, bs, K, hd] — the owner rank's pool, DONATED
+    into the step: the caller must drop its handles and continue with
+    the returned arrays, which on donating backends are the same device
+    buffers updated in place (KV for the new token is written into the
+    request's tail block before attention so the token attends to
+    itself);
     tables/tails: [P, B, MB] / [P, B] from ``build_local_tables`` over
     (owner pool, *creditor pools) with a bucketed MB;
     write_block/write_off: [B] target (block id, offset) of the new
@@ -498,26 +502,16 @@ def _chunk_attn_paged(lp, x, positions, valid, pk, pv, rks, rvs,
                                            mode="drop")
     pv = pv.at[write_block, write_off].set(v[0].astype(pv.dtype),
                                            mode="drop")
-    MB = tables.shape[2]
 
     def rank_partial(p, rk, rv):
-        if backend == "pallas":
-            # Kernel path: R = C queries sharing one (broadcast) table;
-            # the kernel streams blocks through VMEM, nothing gathers.
-            tb = jnp.broadcast_to(tables[p], (C, MB))
-            tl = jnp.broadcast_to(tails[p], (C,))
-            return _paged_partial(q[0], rk, rv, tb, tl, backend)
-        # jnp path: all C queries share the rank's table, so gather the
-        # rank's prefix rows ONCE ([S, K, hd]) and run a shared-KV
-        # partial — transient stays O(prefix), never O(chunk x prefix).
-        from repro.core.distattn import (gather_local_kv,
-                                         local_mask_from_table)
-        k_r, v_r = gather_local_kv(rk, rv, tables[p])      # [1, S, K, hd]
-        valid_r = local_mask_from_table(tables[p], rk.shape[1], tails[p])
-        kv_pos = jnp.zeros_like(valid_r, jnp.int32)        # all < t0
-        o, m, l = micro_attention_prefill(q, k_r, v_r, positions, kv_pos,
-                                          valid_r)
-        return o[0], m[0], l[0]
+        # All C chunk queries share the rank's ONE prefix table. On the
+        # Pallas path the dedicated prefill kernel streams blocks through
+        # VMEM (nothing gathers); the jnp path gathers the prefix rows
+        # once and runs a shared-KV partial (transient O(prefix), never
+        # O(chunk x prefix)). Both live in kernels.ops.
+        from repro.kernels.ops import paged_prefill_attention
+        return paged_prefill_attention(q[0], rk, rv, tables[p, 0],
+                                       tails[p, 0], backend=backend)
 
     part = rank_partial(0, pk, pv)
     for p, (rk, rv) in enumerate(zip(rks, rvs), start=1):
@@ -530,7 +524,8 @@ def _chunk_attn_paged(lp, x, positions, valid, pk, pv, rks, rvs,
     return out, pk, pv, k[0], v[0]
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "backend"))
+@functools.partial(jax.jit, static_argnames=("cfg", "backend"),
+                   donate_argnames=("pool_k", "pool_v"))
 def _prefill_chunk_paged_jit(params, tokens, positions, valid, last_idx,
                              pool_k, pool_v, remote_k, remote_v,
                              tables, tails, write_block, write_off, *,
@@ -570,8 +565,9 @@ def prefill_chunk_paged(params, cfg: ModelConfig, tokens, t0: int,
 
     tokens: [C] chunk token ids (the final chunk is zero-padded; only the
     first ``n_valid`` entries are real); pool_k/pool_v: the owner rank's
-    [L, NB, bs, K, hd] pool, returned updated with the chunk rows that
-    map locally; tables/tails: [P, 1, MB] / [P, 1] from ``prefix_tables``
+    [L, NB, bs, K, hd] pool, DONATED — continue with the returned
+    arrays (in-place row updates on donating backends), never the
+    passed handles; tables/tails: [P, 1, MB] / [P, 1] from ``prefix_tables``
     addressing the already-written tokens [0, t0) on (owner,
     *creditors); write_block/write_off: [C] OWNER-pool target of each
     chunk token (block id NB for rows bound for a creditor or padding —

@@ -22,6 +22,15 @@ plus table edits. Two movement protocols exist:
     back to its owner / sideways); every leg is reserved before any
     byte moves and one refusal rolls the whole plan back.
 
+Both protocols DISPATCH their pool-row copies through the cluster's
+``AsyncStager`` (``async_movement=True``): up to two copy chains stay
+in flight behind decode compute, and the host blocks only at
+table-commit points (``PrefixSink.flush`` at end of admission) or when
+the double buffer overflows — ``async_movement=False`` is the serial
+baseline that ``bench_kv_movement`` A/Bs against (tps_overlap_on/off).
+Reclaim plans additionally pass the scheduler's Eq. 5-7 gain-vs-cost
+check before they are emitted at all (cost-aware undo of a stripe).
+
 Requests whose KV spans instances decode via the owner's multi-rank
 ``decode_step_paged`` merge (the creditor pools are read directly,
 block-table addressed); only query/merge-size traffic is charged per
@@ -43,6 +52,7 @@ from repro.serving.kvpool import rows_for_token_range
 from repro.serving.perfmodel import InstancePerfModel
 from repro.serving.protocol import MoveKVCache, MoveLeg, MoveResult
 from repro.serving.request import Request, RequestState
+from repro.serving.staging import AsyncStager
 
 
 def reserve_all_or_nothing(req_id: int, legs) -> bool:
@@ -100,6 +110,10 @@ class PrefixSink:
         """Scatter global prefix rows [t0, t0 + n) into creditor pools.
 
         k/v: [L, n, K, hd] — one prefill chunk's creditor-bound rows.
+        The scatters are DISPATCHED here and staged on the cluster's
+        ``AsyncStager``; they complete behind the next chunk's compute
+        (or the cluster's decode) and are only drained at ``flush()``,
+        the admission's table-commit point.
         """
         n = k.shape[1]
         for d, start, blocks in self._spans:
@@ -109,9 +123,15 @@ class PrefixSink:
                 continue
             blk, off = rows_for_token_range(blocks, self._bs,
                                             lo - start, hi - start)
-            self._cluster.engines[d].host_kv_rows(
+            eng = self._cluster.engines[d]
+            eng.host_kv_rows(
                 self._req_id, blk, off,
                 k[:, lo - t0:hi - t0], v[:, lo - t0:hi - t0])
+            self._cluster.stager.stage((eng.pool_k, eng.pool_v))
+
+    def flush(self) -> None:
+        """Drain every staged creditor write (end-of-admission commit)."""
+        self._cluster.stager.commit()
 
 
 class Cluster:
@@ -121,11 +141,18 @@ class Cluster:
                  move_chunk_tokens: int = 16, schedule_every: int = 4,
                  heartbeat_timeout: float = 3.0, prefill_chunk: int = 32,
                  avg_new_req_len: int = 512, max_stripes: int = 8,
-                 perf: Optional[InstancePerfModel] = None):
+                 perf: Optional[InstancePerfModel] = None,
+                 async_movement: bool = True,
+                 reclaim_horizon_s: float = 1.0):
         self.cfg = cfg
         self.block_size = block_size
         self.move_chunk = move_chunk_tokens
         self.schedule_every = schedule_every
+        # All stripe/offload/reclaim row copies and streaming-prefill
+        # creditor writes go through one double-buffered stager:
+        # async_movement=True overlaps them with decode compute,
+        # False is the serial baseline (bench_kv_movement A/Bs the two).
+        self.stager = AsyncStager(overlap=async_movement)
         self.engines: Dict[int, InstanceEngine] = {
             i: InstanceEngine(params, cfg, max_batch=max_batch,
                               max_local_len=max_local_len,
@@ -143,7 +170,8 @@ class Cluster:
                                  beta_thres=max_batch,
                                  mem_util_thres=0.8,
                                  avg_new_req_len=avg_new_req_len,
-                                 max_stripes=max_stripes)
+                                 max_stripes=max_stripes,
+                                 reclaim_horizon_s=reclaim_horizon_s)
         self.requests: Dict[int, Request] = {}
         self._step_count = 0
         self._dead: set = set()
@@ -262,13 +290,19 @@ class Cluster:
                 [(self.engines[d].rmanager, n) for d, n in legs]):
             return MoveResult.REJECTED
         # Commit: each leg is pool-row copies + table edits, oldest
-        # blocks first so the source span drains front-to-back.
+        # blocks first so the source span drains front-to-back. The
+        # copies are DISPATCHED and staged, not waited for — the table
+        # edits are host metadata and the functional array dependencies
+        # order any later read of the destination rows after the write;
+        # the stager only bounds how many chains stay in flight
+        # (serial mode blocks each one: the A/B baseline).
         for dst_id, n in legs:
             dst = self.engines[dst_id]
             k, v = src.extract_prefix_kv(req, n)
             blocks = dst.rmanager.commit_move_in(
                 mv.req_id, n, at_front=(dst_id == owner.inst_id))
             dst.host_kv(mv.req_id, blocks, k, v)
+            self.stager.stage((dst.pool_k, dst.pool_v))
             src.rmanager.move_out_prefix(mv.req_id, n)
             if dst_id != owner.inst_id:
                 insts = owner.remote_insts.setdefault(mv.req_id, [])

@@ -37,9 +37,20 @@ cluster ships prefix blocks to a creditor and decoding continues with
 the multi-rank paged step. Non-attention families (hybrid/ssm) keep the
 dense ``prefill()`` + ``DecodeState`` path — their recurrent state is
 O(1) per request and never pools.
+
+ZERO-COPY DISCIPLINE: the pool tensors (and the sampling PRNG key) are
+DONATED into every jitted step and updater — each engine threads exactly
+one live ``pool_k``/``pool_v`` (and ``_key``) reference functionally;
+a handle passed into a step is dead afterwards and the returned array
+is the same device buffer updated in place on donating backends.
+``CommStats.pool_copy_steps`` counts the steps where that in-place
+reuse did NOT happen (0 on the hot path; asserted by
+tests/test_zero_copy.py and gated by bench_kv_movement's
+``decode_pool_zero_copy`` metric).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -69,6 +80,10 @@ class CommStats:
     tokens_moved_steps: List[int] = field(default_factory=list)
     host_gather_s: float = 0.0   # host-side table/step-input build time
     decode_steps: int = 0
+    # Decode steps whose jitted step COPIED the [L, NB, bs, K, hd] pool
+    # instead of updating the donated buffer in place (0 on backends
+    # that honor donation — the zero-copy hot path).
+    pool_copy_steps: int = 0
     # Peak bytes of prompt-KV STAGED in flight by admission — the arrays
     # holding prompt KV outside the pools. Streaming admission stages one
     # chunk's [L, C, K, hd] export; the dense path stages the whole
@@ -77,18 +92,34 @@ class CommStats:
     admit_stage_bytes: int = 0
 
 
-@jax.jit
-def _sample_batch(key, logits, temps):
-    """Next token for EVERY slot in one device call (one readback/step).
+def buffer_ptr(x) -> Optional[int]:
+    """Device buffer address of a jax Array, or None when the backend
+    does not expose one. Does NOT block on in-flight computations — the
+    output buffer of a dispatched step is known before it is filled, so
+    donation (buffer reuse) can be asserted without a sync point."""
+    try:
+        return x.unsafe_buffer_pointer()
+    except Exception:
+        return None
 
-    logits [B, V], temps [B] -> [B] int32; temperature <= 0 is greedy.
+
+@functools.partial(jax.jit, donate_argnames=("key",))
+def _sample_batch(key, logits, temps):
+    """Next tokens for EVERY slot in one device call (one readback/step).
+
+    The PRNG key is split DEVICE-SIDE and donated: the engine threads one
+    live key through the steps the same way it threads the pool tensors —
+    no per-step key re-upload, and the spent key's buffer is reused for
+    its successor. logits [B, V], temps [B] -> ([B] int32, new key);
+    temperature <= 0 is greedy.
     """
+    key, sub = jax.random.split(key)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     safe_t = jnp.where(temps > 0, temps, 1.0)
-    keys = jax.random.split(key, logits.shape[0])
+    keys = jax.random.split(sub, logits.shape[0])
     sampled = jax.vmap(jax.random.categorical)(
         keys, logits.astype(jnp.float32) / safe_t[:, None])
-    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy)
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy), key
 
 
 class InstanceEngine:
@@ -299,6 +330,11 @@ class InstanceEngine:
             self.stats.admit_stage_bytes = max(
                 self.stats.admit_stage_bytes,
                 int((k_c.size + v_c.size) * k_c.dtype.itemsize))
+        if sink is not None:
+            # Table-commit point: the creditor spans become part of this
+            # request's decode view now, so the staged (possibly still
+            # in-flight) row writes are drained here — and only here.
+            sink.flush()
         return logits
 
     def _sample_tokens(self, logits, reqs) -> np.ndarray:
@@ -307,8 +343,8 @@ class InstanceEngine:
         temps = jnp.asarray(
             [(r.sampling.temperature if r is not None else 0.0)
              for r in reqs], jnp.float32)
-        self._key, sub = jax.random.split(self._key)
-        return np.asarray(_sample_batch(sub, logits, temps))
+        toks, self._key = _sample_batch(self._key, logits, temps)
+        return np.asarray(toks)
 
     def _emit(self, req: Request, tok: int) -> None:
         req.output.append(tok)
@@ -382,9 +418,15 @@ class InstanceEngine:
         self.stats.host_gather_s += time.perf_counter() - t0
         self.stats.decode_steps += 1
 
+        # The pools are DONATED into the step: the returned arrays are
+        # the same device buffers updated in place (stale-handle
+        # discipline — self.pool_k/v are the only live references).
+        ptr = buffer_ptr(self.pool_k)
         logits, self.pool_k, self.pool_v = decode_step_paged(
             self.params, self.cfg, tokens, lens, self.pool_k, self.pool_v,
             tables, tails, wblk, woff, remote_pools=remote_pools)
+        if ptr is not None and buffer_ptr(self.pool_k) != ptr:
+            self.stats.pool_copy_steps += 1
 
         # Account the paper's per-step merge traffic — q + (o, m, l) —
         # once per (request, creditor) span entry, matching the per-rank

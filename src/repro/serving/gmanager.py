@@ -45,12 +45,14 @@ class GManager:
     def __init__(self, perf: InstancePerfModel, block_size: int,
                  heartbeat_timeout: float = 3.0,
                  beta_thres: int = 64, mem_util_thres: float = 0.8,
-                 avg_new_req_len: int = 512, max_stripes: int = 8):
+                 avg_new_req_len: int = 512, max_stripes: int = 8,
+                 reclaim_horizon_s: float = 1.0):
         self.scheduler = GreedyScheduler(perf, block_size,
                                          beta_thres=beta_thres,
                                          mem_util_thres=mem_util_thres,
                                          avg_new_req_len=avg_new_req_len,
-                                         max_stripes=max_stripes)
+                                         max_stripes=max_stripes,
+                                         reclaim_horizon_s=reclaim_horizon_s)
         self.block_size = block_size
         self.timeout = heartbeat_timeout
         self.instances: Dict[int, _InstanceStatus] = {}

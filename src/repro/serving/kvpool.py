@@ -16,6 +16,7 @@ O(#sequence-lengths).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -177,11 +178,28 @@ def table_bucket(n_blocks: int, lo: int = TABLE_BUCKET_MIN) -> int:
     return 1 << (m - 1).bit_length()
 
 
+# The pool updaters are jitted with the POOL TENSOR DONATED: on backends
+# that honor donation the block write is an in-place row update of the
+# [L, NB, bs, K, hd] tensor instead of a copy-on-write of the whole pool.
+# Callers must treat the passed pool handle as CONSUMED and continue with
+# the returned array (stale-handle discipline; see engine.InstanceEngine,
+# which threads one live pool reference functionally).
+@functools.partial(jax.jit, donate_argnames=("pool",))
+def _write_pool_rows_jit(pool, idx, rows):
+    return pool.at[:, idx].set(rows.astype(pool.dtype))
+
+
+@functools.partial(jax.jit, donate_argnames=("pool",))
+def _scatter_pool_rows_jit(pool, blk, off, rows):
+    return pool.at[:, blk, off].set(rows.astype(pool.dtype))
+
+
 def write_pool_rows(pool: jax.Array, block_ids: Sequence[int],
                     rows: jax.Array, block_size: int) -> jax.Array:
-    """Write token rows into pool blocks (functional update).
+    """Write token rows into pool blocks (functional update, pool donated).
 
-    pool: [L, NB, bs, K, hd]; rows: [L, n, K, hd] with
+    pool: [L, NB, bs, K, hd] — CONSUMED: the caller must drop its handle
+    and use the returned array; rows: [L, n, K, hd] with
     n <= len(block_ids) * block_size, filling ``block_ids`` in sequence
     order from offset 0 (a partial final block is zero-padded; readers
     mask it via the table's tail length).
@@ -194,7 +212,7 @@ def write_pool_rows(pool: jax.Array, block_ids: Sequence[int],
         rows = jnp.pad(rows, widths)
     rows = rows.reshape((L, nb, block_size) + rows.shape[2:])
     idx = jnp.asarray(list(block_ids), jnp.int32)
-    return pool.at[:, idx].set(rows.astype(pool.dtype))
+    return _write_pool_rows_jit(pool, idx, rows)
 
 
 def read_pool_rows(pool: jax.Array, block_ids: Sequence[int],
@@ -224,16 +242,17 @@ def rows_for_token_range(blocks: Sequence[int], block_size: int,
 
 def scatter_pool_rows(pool: jax.Array, block_ids, offsets,
                       rows: jax.Array) -> jax.Array:
-    """Row-addressed scatter into a pool (functional update).
+    """Row-addressed scatter into a pool (functional update, pool donated).
 
-    pool: [L, NB, bs, K, hd]; rows: [L, n, K, hd] written at
-    ``(block_ids[i], offsets[i])`` per row — unlike ``write_pool_rows``
-    this can land mid-block, which is what per-chunk streaming writes
-    into already-committed creditor blocks need.
+    pool: [L, NB, bs, K, hd] — CONSUMED, continue with the returned
+    array; rows: [L, n, K, hd] written at ``(block_ids[i], offsets[i])``
+    per row — unlike ``write_pool_rows`` this can land mid-block, which
+    is what per-chunk streaming writes into already-committed creditor
+    blocks need.
     """
     blk = jnp.asarray(block_ids, jnp.int32)
     off = jnp.asarray(offsets, jnp.int32)
-    return pool.at[:, blk, off].set(rows.astype(pool.dtype))
+    return _scatter_pool_rows_jit(pool, blk, off, rows)
 
 
 def prefix_tables(pools: Sequence[RankKVPool], req_id: int,

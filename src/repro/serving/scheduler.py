@@ -43,7 +43,7 @@ all-or-nothing per plan.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.serving.perfmodel import InstancePerfModel
 
@@ -117,7 +117,8 @@ class GreedyScheduler:
                  beta_thres: int = 64, mem_util_thres: float = 0.8,
                  max_moves_per_round: int = 64,
                  avg_new_req_len: int = 512,
-                 max_stripes: int = 8):
+                 max_stripes: int = 8,
+                 reclaim_horizon_s: float = 1.0):
         self.perf = perf
         self.bs = block_size
         self.beta_thres = beta_thres
@@ -128,6 +129,10 @@ class GreedyScheduler:
         # gManager estimates this from the recent arrival stream; it sets
         # how much batch growth a freed block buys (paper Fig. 7a slope).
         self.avg_new_len = avg_new_req_len
+        # Amortization window of the reclaim gain check: undoing a
+        # stripe must win back its own movement cost within this many
+        # seconds of modeled decode, or the eviction is not planned.
+        self.reclaim_horizon_s = reclaim_horizon_s
 
     # ------------------------------------------------------------------ #
     def _span_stats(self, v: InstanceView) -> Tuple[int, int]:
@@ -286,6 +291,72 @@ class GreedyScheduler:
             creditors.sort(key=lambda v: v.mem_util)
         return moves
 
+    def _apply_reclaim(self, by_id: Dict[int, InstanceView], host_id: int,
+                       owner_id: Optional[int], rid: int, blk: int,
+                       legs: List[SpanLeg]) -> None:
+        """Mutate views as if host ``host_id`` evicted rid's ``blk``-block
+        hosted span along ``legs`` (owner re-adopt and/or sideways)."""
+        h = by_id[host_id]
+        owner = by_id.get(owner_id) if owner_id is not None else None
+        h.hosted_tokens -= blk * self.bs
+        h.mem_blocks_used -= blk
+        del h.requests[rid]
+        for leg in legs:
+            dst = by_id[leg.dst]
+            dst.mem_blocks_used += leg.num_blocks
+            if owner is not None and leg.dst == owner.inst_id:
+                owner.offloaded_tokens -= leg.num_blocks * self.bs
+                ln, b0, own = owner.requests[rid]
+                owner.requests[rid] = (ln, b0 + leg.num_blocks, own)
+            else:
+                dst.hosted_tokens += leg.num_blocks * self.bs
+            if owner is not None:
+                spans = owner.req_spans.setdefault(rid, {})
+                spans.pop(host_id, None)
+                if leg.dst != owner.inst_id:
+                    spans[leg.dst] = spans.get(leg.dst, 0) + \
+                        leg.num_blocks
+
+    def _reclaim_pays(self, by_id: Dict[int, InstanceView], host_id: int,
+                      owner_id: Optional[int], rid: int, blk: int,
+                      legs: List[SpanLeg]) -> bool:
+        """Eq. 5-7 gain check for one reclaim candidate: undo a stripe
+        only when the modeled aggregate tps gain, amortized over
+        ``reclaim_horizon_s``, exceeds the movement cost.
+
+        Gain is scored on copies of the involved views exactly like an
+        offload plan — including the batch-growth credit of the host's
+        freed blocks (relieving a stressed host is worth admitted work,
+        not just lower utilization). Cost is the decode the source and
+        destinations forgo while the span's bytes cross the link,
+        charged UN-overlapped — conservative now that the runtime
+        overlaps movement with compute, so marginal evictions stay
+        filtered (the anti-thrash hysteresis) while clearly-paying ones
+        pass."""
+        involved = {host_id} | {leg.dst for leg in legs}
+        if owner_id is not None:
+            involved.add(owner_id)
+        copies = {i: by_id[i].copy() for i in involved}
+        before = sum(self._inst_tps(v) for v in copies.values())
+        self._apply_reclaim(copies, host_id, owner_id, rid, blk, legs)
+        freed_tok = blk * self.bs
+        after = 0.0
+        for i, v in copies.items():
+            if i == host_id:
+                after += self._debtor_tps_after(
+                    v, by_id[i].batch_size, freed_tok)
+            else:
+                after += self._inst_tps(v)
+        gain = after - before
+        if gain <= 0.0:
+            return False
+        move_bytes = freed_tok * self.perf.kv_bytes_per_token_layer() \
+            * self.perf.cfg.num_layers
+        t_move = move_bytes / self.perf.hw.ici_link_bw
+        busy = {host_id} | {leg.dst for leg in legs}
+        lost_tokens = t_move * sum(self._inst_tps(by_id[i]) for i in busy)
+        return gain * self.reclaim_horizon_s >= lost_tokens
+
     def _plan_reclaims(self, views: List[InstanceView],
                        stressed: List[InstanceView],
                        creditors: List[InstanceView]) -> List[StripedMove]:
@@ -296,7 +367,10 @@ class GreedyScheduler:
         threshold — relief, not a purge — which together with the
         stress trigger sitting ABOVE that threshold (see ``plan``)
         gives the offload/reclaim pair a hysteresis band instead of a
-        copy ping-pong at the margin."""
+        copy ping-pong at the margin. The trigger only NOMINATES spans:
+        each candidate must additionally pass the ``_reclaim_pays``
+        Eq. 5-7 gain-vs-move-cost check, so a stripe is undone only
+        when reclaiming it is modeled to pay for its own copies."""
         by_id = {v.inst_id: v for v in views}
         moves: List[StripedMove] = []
         for h in stressed:
@@ -313,6 +387,7 @@ class GreedyScheduler:
                 owner = next((v for v in views
                               if v.requests.get(rid, (0, 0, False))[2]),
                              None)
+                owner_id = owner.inst_id if owner is not None else None
                 legs: List[SpanLeg] = []
                 remaining = blk
                 # Preferred: back to the owner if it has real headroom
@@ -341,27 +416,11 @@ class GreedyScheduler:
                         remaining -= take
                 if not legs or remaining > 0:
                     continue                 # nowhere to put the span
-                # Apply to working views.
-                tok = blk * self.bs
-                h.hosted_tokens -= tok
-                h.mem_blocks_used -= blk
-                del h.requests[rid]
-                for leg in legs:
-                    dst = by_id[leg.dst]
-                    dst.mem_blocks_used += leg.num_blocks
-                    if owner is not None and leg.dst == owner.inst_id:
-                        owner.offloaded_tokens -= leg.num_blocks * self.bs
-                        ln, b0, own = owner.requests[rid]
-                        owner.requests[rid] = (ln, b0 + leg.num_blocks,
-                                               own)
-                    else:
-                        dst.hosted_tokens += leg.num_blocks * self.bs
-                    if owner is not None:
-                        spans = owner.req_spans.setdefault(rid, {})
-                        spans.pop(h.inst_id, None)
-                        if leg.dst != owner.inst_id:
-                            spans[leg.dst] = spans.get(leg.dst, 0) + \
-                                leg.num_blocks
+                if not self._reclaim_pays(by_id, h.inst_id, owner_id,
+                                          rid, blk, legs):
+                    continue                 # relief would cost > it gains
+                self._apply_reclaim(by_id, h.inst_id, owner_id, rid, blk,
+                                    legs)
                 moves.append(StripedMove(rid, h.inst_id, legs,
                                          kind="reclaim"))
         return moves

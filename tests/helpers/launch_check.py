@@ -39,15 +39,25 @@ def check_cells():
               f"coll={sum(coll.values())}")
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map (0.5+, check_vma) or the experimental module
+    (0.4.x, check_rep) — whichever this jax provides."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def check_grad_sync():
     from repro.training.grad_sync import _sync_one
     mesh = jax.make_mesh((4,), ("pod",))
     g = np.random.default_rng(0).normal(size=(4, 32, 16)).astype(np.float32)
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(_shard_map(
         lambda x: _sync_one(x[0], "pod")[None],
-        mesh=mesh, in_specs=P("pod"), out_specs=P("pod"),
-        check_vma=False))
+        mesh=mesh, in_specs=P("pod"), out_specs=P("pod")))
     with mesh:
         out = np.asarray(fn(jnp.asarray(g)))
     want = g.mean(axis=0)
@@ -55,10 +65,10 @@ def check_grad_sync():
         np.testing.assert_allclose(out[i], want, atol=2e-2)
     # int8 all-gather must appear in the lowered HLO (wire-level claim).
     with mesh:
-        txt = jax.jit(jax.shard_map(
+        txt = jax.jit(_shard_map(
             lambda x: _sync_one(x[0], "pod")[None], mesh=mesh,
-            in_specs=P("pod"), out_specs=P("pod"),
-            check_vma=False)).lower(jnp.asarray(g)).compile().as_text()
+            in_specs=P("pod"), out_specs=P("pod"))
+            ).lower(jnp.asarray(g)).compile().as_text()
     assert "s8[" in txt and "all-gather" in txt
     print("OK grad_sync int8 wire format + numerics")
 
