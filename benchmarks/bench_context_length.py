@@ -96,19 +96,19 @@ def measured_admission(csv=True):
     import numpy as np
 
     from repro.models.model import init_params
-    from repro.serving import InstanceEngine, Request, SamplingParams
+    from repro.serving import LLMServer, SamplingParams, ServingConfig
 
     cfg = get_smoke_config("olmo-1b")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     T, chunk = 96, 16
-    eng = InstanceEngine(params, cfg, max_batch=1, max_local_len=128,
-                         pool_blocks=32, block_size=8, prefill_chunk=chunk)
-    req = Request(prompt=list(rng.integers(0, cfg.vocab_size, T)),
-                  sampling=SamplingParams(max_new_tokens=1))
-    eng.submit(req)
-    eng.step()
-    peak = eng.stats.admit_stage_bytes
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=1, max_batch=1, max_local_len=128, pool_blocks=32,
+        prefill_chunk=chunk))
+    h = server.submit(rng.integers(0, cfg.vocab_size, T).tolist(),
+                      SamplingParams(max_new_tokens=1))
+    h.result()
+    peak = server.cluster.engines[0].stats.admit_stage_bytes
     dense = T * cfg.kv_bytes_per_token()
     if csv:
         print("admit_measured_T,chunk,admit_stage_bytes_chunked,"

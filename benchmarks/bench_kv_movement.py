@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.distributed.hardware import V5E
 from repro.models.model import init_params
-from repro.serving import Cluster, Request, SamplingParams
+from repro.serving import LLMServer, SamplingParams, ServingConfig
 from repro.serving.perfmodel import InstancePerfModel
 
 try:
@@ -65,23 +65,22 @@ def _run_cluster(params, cfg, *, move_chunk, async_movement,
     Fig. 12 regime of sustained per-step movement traffic.
     """
     rng = np.random.default_rng(0)
-    cl = Cluster(params, cfg, n_instances=2, max_batch=2,
-                 max_local_len=max_local_len, pool_blocks=96, block_size=8,
-                 move_chunk_tokens=move_chunk, schedule_every=1000,
-                 async_movement=async_movement)
-    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
-                    sampling=SamplingParams(max_new_tokens=n_new))
-            for _ in range(2)]
-    for r in reqs:
-        cl.submit(r)
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=2, max_batch=2, max_local_len=max_local_len,
+        pool_blocks=96, move_chunk_tokens=move_chunk, prefill_chunk=32,
+        schedule_every=1000, async_movement=async_movement))
+    handles = [server.submit(rng.integers(0, cfg.vocab_size, 40).tolist(),
+                             SamplingParams(max_new_tokens=n_new))
+               for _ in range(2)]
+    cl = server.cluster
     t0 = time.perf_counter()
-    cl.run_until_done(max_steps=600)
+    server.drain(max_steps=600)
     cl.stager.commit()                    # drain before stopping the clock
     dt = time.perf_counter() - t0
     steps = sum(e.stats.decode_steps for e in cl.engines.values())
     copies = sum(e.stats.pool_copy_steps for e in cl.engines.values())
     return {
-        "tps": sum(len(r.output) for r in reqs) / dt,
+        "tps": sum(h.metrics["n_tokens"] for h in handles) / dt,
         "moved": cl.throughput_stats["kv_moved_bytes"],
         "gather_us": sum(e.stats.host_gather_s for e in cl.engines.values())
         / max(steps, 1) * 1e6,

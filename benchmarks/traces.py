@@ -76,3 +76,26 @@ def trace_stats(trace_id: int, n: int = 5000, seed: int = 0
     lens = gen_lengths(trace_id, n, seed)
     return float(lens.mean()), float(lens.std()), int(lens.min()), \
         int(lens.max())
+
+
+def to_arrivals(reqs: List[TraceRequest], vocab_size: int, seed: int = 0,
+                prompt_scale: float = 1.0, max_prompt: int = 10 ** 9,
+                max_output: int = 10 ** 9, time_scale: float = 1.0):
+    """Wire a generated trace into the ``LLMServer.run`` open-loop pump.
+
+    Materializes each ``TraceRequest`` as a ``serving.Arrival`` with
+    random token ids. ``prompt_scale``/``max_prompt``/``max_output``
+    shrink the paper-scale lengths to what a smoke model can serve in
+    CI; ``time_scale`` compresses the arrival timeline the same way.
+    """
+    from repro.serving import Arrival, SamplingParams
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in reqs:
+        plen = max(1, min(int(r.prompt_len * prompt_scale), max_prompt))
+        olen = max(1, min(r.output_len, max_output))
+        out.append(Arrival(
+            at=r.arrival * time_scale,
+            prompt=rng.integers(0, vocab_size, size=plen).tolist(),
+            sampling=SamplingParams(max_new_tokens=olen)))
+    return out

@@ -13,7 +13,8 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import prefill
-from repro.serving import Cluster, Request, RequestState, SamplingParams
+from repro.serving import (LLMServer, RequestState, SamplingParams,
+                           ServingConfig)
 
 
 def reference(params, cfg, prompt, n_new):
@@ -39,22 +40,21 @@ def main():
     print(f"prompt len {len(prompt)}; per-instance local window 24 "
           f"-> needs cluster pooling")
 
-    cl = Cluster(params, cfg, n_instances=6, max_batch=2,
-                 max_local_len=24, pool_blocks=32, block_size=8,
-                 move_chunk_tokens=8)
-    req = Request(prompt=prompt,
-                  sampling=SamplingParams(max_new_tokens=n_new))
-    cl.submit(req)
-    cl.run_until_done(max_steps=300)
-    assert req.state == RequestState.FINISHED, req.state
+    server = LLMServer(params, cfg,
+                       ServingConfig.smoke(n_instances=6, max_batch=2,
+                                           max_local_len=24,
+                                           pool_blocks=32))
+    handle = server.submit(prompt, SamplingParams(max_new_tokens=n_new))
+    out = handle.result(max_steps=300)
+    assert handle.status == RequestState.FINISHED, handle.status
 
     ref = reference(params, cfg, prompt, n_new)
-    match = req.output == ref
-    print(f"spanned output: {req.output}")
+    match = out == ref
+    print(f"spanned output: {out}")
     print(f"reference:      {ref}")
     print(f"exact match: {match}")
     spans = {i: e.rmanager.pool.alloc.used_count
-             for i, e in cl.engines.items()}
+             for i, e in server.cluster.engines.items()}
     print(f"blocks held per instance at finish: {spans}")
     assert match
     print("long-context DistAttention == single-cache reference.")

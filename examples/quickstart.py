@@ -1,4 +1,5 @@
-"""Quickstart: build a tiny model and serve a few batched requests.
+"""Quickstart: build a tiny model and serve requests through the
+request-lifecycle frontend — submit, stream tokens, read metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +8,7 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import init_params
-from repro.serving import InstanceEngine, Request, SamplingParams
+from repro.serving import LLMServer, SamplingParams, ServingConfig
 
 
 def main():
@@ -16,25 +17,30 @@ def main():
           f"family={cfg.family})")
     params = init_params(jax.random.PRNGKey(0), cfg)
 
-    engine = InstanceEngine(params, cfg, max_batch=4, max_local_len=64,
-                            pool_blocks=64, block_size=8)
+    server = LLMServer(params, cfg,
+                       ServingConfig.smoke(n_instances=1, max_batch=4,
+                                           max_local_len=64,
+                                           pool_blocks=64))
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
-                    sampling=SamplingParams(max_new_tokens=12,
-                                            temperature=0.8, seed=i))
-            for i, n in enumerate((6, 11, 17))]
-    for r in reqs:
-        engine.submit(r)
+    handles = [server.submit(
+        rng.integers(0, cfg.vocab_size, size=n).tolist(),
+        SamplingParams(max_new_tokens=12, temperature=0.8, top_k=20,
+                       seed=i))
+        for i, n in enumerate((6, 11, 17))]
 
-    step = 0
-    while not all(r.done for r in reqs) and step < 64:
-        made = engine.step()
-        step += 1
-        print(f"step {step:02d}: batch={engine.batch_size} "
-              f"+{made} tokens")
-    for r in reqs:
-        print(f"req {r.req_id}: prompt[{len(r.prompt)}] -> "
-              f"output {r.output}")
+    # Stream the first request token-by-token; the iterator drives the
+    # server, so the other handles make progress concurrently.
+    print(f"req {handles[0].req_id} streaming:", end=" ", flush=True)
+    for tok in handles[0].tokens():
+        print(tok, end=" ", flush=True)
+    print()
+
+    for h in handles:
+        out = h.result()
+        m = h.metrics
+        print(f"req {h.req_id}: {h.status.value}, {len(out)} tokens, "
+              f"ttft={m['ttft'] * 1e3:.1f}ms "
+              f"tbt_mean={m['tbt_mean'] * 1e3:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
-"""End-to-end driver: a 3-instance cluster with gManager scheduling,
-mixed short/long traffic, DistAttention spanning, a mid-run instance
-failure, and elastic scale-out.
+"""End-to-end driver: a 3-instance cluster behind the LLMServer
+frontend — mixed short/long traffic with priorities and a deadline,
+DistAttention spanning, a cancellation, and elastic scale-out.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -9,52 +9,59 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models.model import init_params
-from repro.serving import Cluster, Request, RequestState, SamplingParams
+from repro.serving import (LLMServer, RequestState, SamplingParams,
+                           ServingConfig)
 
 
 def main():
     cfg = get_smoke_config("olmo-1b")
     params = init_params(jax.random.PRNGKey(0), cfg)
-    cluster = Cluster(params, cfg, n_instances=3, max_batch=3,
-                      max_local_len=32, pool_blocks=48, block_size=8,
-                      move_chunk_tokens=8, heartbeat_timeout=1e9)
-    rng = np.random.default_rng(7)
+    server = LLMServer(params, cfg, ServingConfig.smoke(n_instances=3))
 
     # Mixed load: mostly short chats + one long-context request that
-    # overflows its instance and spans creditors via DistAttention.
-    reqs = []
+    # overflows its instance and spans creditors via DistAttention. The
+    # long request carries a deadline, so the planner treats it as the
+    # most urgent debtor when offloading prefix blocks.
+    rng = np.random.default_rng(7)
+    handles = []
     for i, n in enumerate((6, 9, 60, 12, 7, 15)):
-        reqs.append(Request(
-            prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
-            sampling=SamplingParams(max_new_tokens=10)))
-    for r in reqs:
-        cluster.submit(r)
+        handles.append(server.submit(
+            rng.integers(0, cfg.vocab_size, size=n).tolist(),
+            SamplingParams(max_new_tokens=10),
+            priority=1 if n > 30 else 0,
+            deadline_s=30.0 if n > 30 else None))
+    victim = handles[1]                   # running by the time we cancel
 
-    for step in range(1, 200):
-        made = cluster.step()
+    step = 0
+    while not all(h.done for h in handles) and step < 200:
+        made = server.step()
+        step += 1
         if step % 5 == 0:
             views = {i: (e.batch_size,
                          f"{e.rmanager.pool.memory_utilization:.0%}")
-                     for i, e in cluster.engines.items()
-                     if i not in cluster._dead}
+                     for i, e in server.cluster.engines.items()
+                     if i not in server.cluster._dead}
             print(f"step {step:03d}: +{made} tok  "
                   f"(inst -> batch, mem_util) {views}")
+        if step == 8:
+            print(f">>> cancelling req {victim.req_id} mid-flight")
+            victim.cancel()
         if step == 12:
             print(">>> elastic scale-out: adding instance")
-            cluster.add_instance(params)
-        if all(r.done for r in reqs):
-            break
+            server.cluster.add_instance(params)
 
-    stats = cluster.throughput_stats
+    stats = server.cluster.throughput_stats
     print(f"\nKV moved: {stats['kv_moved_bytes'] / 1024:.1f} KiB; "
           f"query/merge traffic: "
           f"{stats['query_shipped_bytes'] / 1024:.1f} KiB")
-    for r in reqs:
-        status = "OK " if r.state == RequestState.FINISHED else "FAIL"
-        print(f"  [{status}] req {r.req_id} len={r.length} "
-              f"out={len(r.output)}")
-    assert all(r.state == RequestState.FINISHED for r in reqs)
-    print("all requests served.")
+    for h in handles:
+        m = h.metrics
+        print(f"  [{h.status.value:9s}] req {h.req_id} "
+              f"out={int(m['n_tokens'])} ttft={m['ttft'] * 1e3:.0f}ms")
+    assert victim.status == RequestState.CANCELLED
+    assert all(h.status == RequestState.FINISHED
+               for h in handles if h is not victim)
+    print("all surviving requests served; cancellation released its KV.")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
-"""Serving launcher: run an Infinite-LLM cluster on synthetic traffic
-(smoke configs, CPU) or AOT-compile the production serve step.
+"""Serving launcher: drive an Infinite-LLM ``LLMServer`` open-loop on
+synthetic traffic (smoke configs, CPU) or AOT-compile the production
+serve step.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
       --instances 3 --requests 8
@@ -36,31 +37,32 @@ def main():
     import numpy as np
     from repro.configs import get_smoke_config
     from repro.models.model import init_params
-    from repro.serving import Cluster, Request, RequestState, \
-        SamplingParams
+    from repro.serving import (Arrival, LLMServer, SamplingParams,
+                               ServingConfig)
 
     cfg = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), cfg)
-    cl = Cluster(params, cfg, n_instances=args.instances, max_batch=3,
-                 max_local_len=32, pool_blocks=48, block_size=8,
-                 move_chunk_tokens=8)
+    server = LLMServer(params, cfg,
+                       ServingConfig.smoke(n_instances=args.instances))
+    # Open-loop synthetic traffic: Poisson-ish arrivals over ~1s.
     rng = np.random.default_rng(0)
-    reqs = []
+    arrivals = []
     for i in range(args.requests):
         n = int(rng.integers(40, 70)) if rng.random() < args.long_frac \
             else int(rng.integers(4, 20))
-        reqs.append(Request(
-            prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
+        arrivals.append(Arrival(
+            at=float(rng.uniform(0.0, 1.0)),
+            prompt=rng.integers(0, cfg.vocab_size, size=n).tolist(),
             sampling=SamplingParams(max_new_tokens=args.max_new)))
-        cl.submit(reqs[-1])
     t0 = time.time()
-    steps = cl.run_until_done(max_steps=500)
+    stats = server.run(arrivals)
     dt = time.time() - t0
-    done = sum(r.state == RequestState.FINISHED for r in reqs)
-    toks = sum(len(r.output) for r in reqs)
-    st = cl.throughput_stats
-    print(f"{done}/{len(reqs)} finished, {toks} tokens in {steps} steps "
-          f"({dt:.1f}s wall on CPU)")
+    st = server.cluster.throughput_stats
+    print(f"{stats['finished']:.0f}/{len(arrivals)} finished, "
+          f"{stats['tokens']:.0f} tokens ({dt:.1f}s wall on CPU); "
+          f"ttft_p50={stats['ttft_p50'] * 1e3:.0f}ms "
+          f"ttft_p99={stats['ttft_p99'] * 1e3:.0f}ms "
+          f"tbt_p99={stats['tbt_p99'] * 1e3:.0f}ms")
     print(f"KV moved {st['kv_moved_bytes'] / 1024:.1f} KiB; "
           f"query/merge traffic {st['query_shipped_bytes'] / 1024:.1f} KiB")
 

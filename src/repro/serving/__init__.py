@@ -1,16 +1,56 @@
+"""Infinite-LLM serving runtime: request-lifecycle frontend over a
+DistAttention cluster.
+
+Public API (start here)
+-----------------------
+``LLMServer`` is the serving frontend — the API everything outside this
+package uses:
+
+    from repro.serving import LLMServer, ServingConfig, SamplingParams
+
+    server = LLMServer(params, cfg, ServingConfig.smoke(n_instances=3))
+    handle = server.submit(prompt_tokens,
+                           SamplingParams(max_new_tokens=32),
+                           priority=1, deadline_s=2.0)
+    for tok in handle.tokens():      # incremental stream
+        ...
+    handle.result(); handle.status; handle.metrics; handle.cancel()
+
+    stats = server.run(arrivals)     # open-loop trace pump:
+    stats["ttft_p99"], stats["tbt_p99"]
+
+``ServingConfig`` is the one typed, frozen home of every serving knob
+(cluster shape, KV pool, movement, Algorithm-1 thresholds, admission
+backpressure), with ``smoke()``/``v5e()`` presets. Cancellation
+propagates through every layer: engine slot, in-flight streaming
+prefill (creditor reservations rolled back via the all-or-nothing
+machinery), hosted spans, and planned KV moves (-> ``MoveResult.GONE``).
+
+Internal layers (exported for tests/benchmarks, not the serving API)
+--------------------------------------------------------------------
+``Cluster`` executes steps: N ``InstanceEngine``s (each owning a
+device-resident paged KV pool addressed through ``RankKVPool`` block
+tables) plus a ``GManager`` running the paper's Algorithm 1 via
+``GreedyScheduler``. Driving ``cluster.step()`` by hand is the OLD
+batch-mode pattern — new code should go through ``LLMServer``.
+"""
 from repro.serving.cluster import Cluster
+from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
 from repro.serving.kvpool import BlockAllocator, RankKVPool
 from repro.serving.perfmodel import InstancePerfModel, cluster_tps
-from repro.serving.request import Request, RequestState, SamplingParams
+from repro.serving.request import (Request, RequestIdAllocator,
+                                   RequestState, SamplingParams)
 from repro.serving.rmanager import RManager
 from repro.serving.scheduler import (GreedyScheduler, InstanceView,
                                      SpanLeg, StripedMove)
+from repro.serving.server import Arrival, LLMServer, RequestHandle
 
 __all__ = [
+    "LLMServer", "RequestHandle", "Arrival", "ServingConfig",
     "Cluster", "InstanceEngine", "GManager", "BlockAllocator", "RankKVPool",
-    "InstancePerfModel", "cluster_tps", "Request", "RequestState",
-    "SamplingParams", "RManager", "GreedyScheduler", "InstanceView",
-    "SpanLeg", "StripedMove",
+    "InstancePerfModel", "cluster_tps", "Request", "RequestIdAllocator",
+    "RequestState", "SamplingParams", "RManager", "GreedyScheduler",
+    "InstanceView", "SpanLeg", "StripedMove",
 ]

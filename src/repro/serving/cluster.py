@@ -46,6 +46,7 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
 from repro.serving.kvpool import rows_for_token_range
@@ -133,45 +134,51 @@ class PrefixSink:
         """Drain every staged creditor write (end-of-admission commit)."""
         self._cluster.stager.commit()
 
+    def abort(self) -> None:
+        """Cancellation rollback: drain any staged (possibly in-flight)
+        row writes, then release every committed creditor span — the
+        same all-or-nothing metadata rollback a refused stripe takes.
+        The written rows become garbage in freed blocks; allocator
+        state is restored exactly."""
+        self._cluster.stager.commit()
+        for d in self.rank_ids:
+            self._cluster.engines[d].drop_hosted(self._req_id)
+
 
 class Cluster:
-    def __init__(self, params, cfg: ModelConfig, *, n_instances: int = 2,
-                 max_batch: int = 8, max_local_len: int = 128,
-                 pool_blocks: int = 64, block_size: int = 16,
-                 move_chunk_tokens: int = 16, schedule_every: int = 4,
-                 heartbeat_timeout: float = 3.0, prefill_chunk: int = 32,
-                 avg_new_req_len: int = 512, max_stripes: int = 8,
-                 perf: Optional[InstancePerfModel] = None,
-                 async_movement: bool = True,
-                 reclaim_horizon_s: float = 1.0):
+    def __init__(self, params, cfg: ModelConfig,
+                 config: Optional[ServingConfig] = None, *,
+                 perf: Optional[InstancePerfModel] = None):
+        config = config if config is not None else ServingConfig()
         self.cfg = cfg
-        self.block_size = block_size
-        self.move_chunk = move_chunk_tokens
-        self.schedule_every = schedule_every
+        self.config = config
+        self.block_size = config.block_size
+        self.move_chunk = config.move_chunk_tokens
+        self.schedule_every = config.schedule_every
         # All stripe/offload/reclaim row copies and streaming-prefill
         # creditor writes go through one double-buffered stager:
         # async_movement=True overlaps them with decode compute,
         # False is the serial baseline (bench_kv_movement A/Bs the two).
-        self.stager = AsyncStager(overlap=async_movement)
+        self.stager = AsyncStager(overlap=config.async_movement)
         self.engines: Dict[int, InstanceEngine] = {
-            i: InstanceEngine(params, cfg, max_batch=max_batch,
-                              max_local_len=max_local_len,
-                              pool_blocks=pool_blocks,
-                              block_size=block_size, inst_id=i,
-                              prefill_chunk=prefill_chunk)
-            for i in range(n_instances)
+            i: InstanceEngine(params, cfg, max_batch=config.max_batch,
+                              max_local_len=config.max_local_len,
+                              pool_blocks=config.pool_blocks,
+                              block_size=config.block_size, inst_id=i,
+                              prefill_chunk=config.prefill_chunk)
+            for i in range(config.n_instances)
         }
         for eng in self.engines.values():
             eng.prefix_sink = self._make_prefix_sink(eng.inst_id)
             eng.peers = self.engines      # shared: add_instance updates all
         perf = perf if perf is not None else InstancePerfModel(cfg)
-        self.gmanager = GManager(perf, block_size,
-                                 heartbeat_timeout=heartbeat_timeout,
-                                 beta_thres=max_batch,
-                                 mem_util_thres=0.8,
-                                 avg_new_req_len=avg_new_req_len,
-                                 max_stripes=max_stripes,
-                                 reclaim_horizon_s=reclaim_horizon_s)
+        self.gmanager = GManager(perf, config.block_size,
+                                 heartbeat_timeout=config.heartbeat_timeout,
+                                 beta_thres=config.beta_threshold,
+                                 mem_util_thres=config.mem_util_thres,
+                                 avg_new_req_len=config.avg_new_req_len,
+                                 max_stripes=config.max_stripes,
+                                 reclaim_horizon_s=config.reclaim_horizon_s)
         self.requests: Dict[int, Request] = {}
         self._step_count = 0
         self._dead: set = set()
@@ -182,7 +189,9 @@ class Cluster:
         self._pending_release: set = set()
 
     # ----------------------------------------------------------------- #
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, now: Optional[float] = None) -> None:
+        if req.req_id not in self.requests and req.arrival_time == 0.0:
+            req.arrival_time = time.monotonic() if now is None else now
         self.requests[req.req_id] = req
         inst = self.gmanager.pick_instance_for_new_request()
         if inst is None or inst in self._dead:
@@ -191,6 +200,39 @@ class Cluster:
                     if i not in self._dead]
             inst = min(live, key=lambda e: e.batch_size).inst_id
         self.engines[inst].submit(req)
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a request anywhere in its lifecycle.
+
+        Propagates through every layer: the owning engine's slot (or
+        waiting queue) is released, an in-flight streaming prefill is
+        flagged and aborts at its next chunk boundary (rolling back its
+        ``PrefixSink`` creditor reservations), every creditor-hosted
+        span is dropped exactly once, and any planned-but-unexecuted
+        ``MoveKVCache`` for the request resolves ``MoveResult.GONE``
+        (``_execute_move`` checks ``req.done`` before reserving, so a
+        racing plan can never leave orphan reservations). Returns True
+        if the request was live when cancelled.
+        """
+        req = self.requests.get(req_id)
+        if req is None or req.done:
+            return False
+        req.cancelled = True
+        for i, eng in self.engines.items():
+            if i in self._dead:
+                continue
+            if eng.cancel(req):
+                break
+        # Mid-streaming-prefill: the engine's chunk loop owns the
+        # rollback; hosted spans are released when its finished event
+        # drains. For every other state the request is terminal now —
+        # release creditor-hosted spans immediately so allocator state
+        # is clean the moment cancel() returns.
+        if req.done:
+            for eng in self.engines.values():
+                if eng.rmanager.is_hosting(req_id):
+                    eng.drop_hosted(req_id)
+        return True
 
     # --- movement ------------------------------------------------------ #
     def _make_prefix_sink(self, src_id: int):
@@ -439,7 +481,15 @@ class Cluster:
         # Reactive overflow shipping, then periodic Algorithm-1 planning.
         self._reactive_moves()
         if self._step_count % self.schedule_every == 0:
-            for mv in self.gmanager.plan_moves():
+            # Frontend lifecycle feeds the planner: per-request urgency
+            # (priority + deadline proximity) biases which debtor
+            # requests are offloaded first, so near-deadline requests
+            # get their memory relief before best-effort ones.
+            urgency = {rid: r.urgency(now)
+                       for rid, r in self.requests.items()
+                       if not r.done and (r.priority
+                                          or r.deadline_s is not None)}
+            for mv in self.gmanager.plan_moves(urgency=urgency):
                 self._execute_move(mv)
 
         made = 0

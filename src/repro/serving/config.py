@@ -1,0 +1,91 @@
+"""Typed serving configuration: every cluster/engine/frontend knob in
+one frozen dataclass.
+
+Before this existed the same dozen kwargs were threaded (with drifting
+values) through ``Cluster.__init__``, ``GManager``, ``InstanceEngine``,
+every example, the launcher, and every benchmark. ``ServingConfig`` is
+now the single source of truth: ``Cluster(params, cfg, config=...)`` and
+``LLMServer(params, cfg, config=...)`` take it, and the presets below
+pin the two configurations the repo actually runs —
+
+  * ``ServingConfig.smoke()``  — CPU smoke scale (tests, examples, CI
+    benchmarks): tiny pools, 8-token blocks, chunked prefill small
+    enough that every code path (spill, striping, reclaim) triggers on
+    40-token prompts.
+  * ``ServingConfig.v5e()``    — the paper-regime deployment shape the
+    perf model is calibrated for (TPU v5e instance, 16-token blocks,
+    production batch).
+
+Both presets accept overrides: ``ServingConfig.smoke(n_instances=3)``.
+Use ``cfg.replace(async_movement=False)`` to derive variants for A/Bs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """All serving knobs. Frozen: derive variants via ``replace()``."""
+
+    # --- cluster shape ------------------------------------------------ #
+    n_instances: int = 2           # model replicas (paper: instances)
+    max_batch: int = 8             # decode slots per instance
+    # --- per-instance KV pool ----------------------------------------- #
+    max_local_len: int = 128       # per-request LOCAL quota (tokens)
+    pool_blocks: int = 64          # blocks in each instance's pool
+    block_size: int = 16           # tokens per block
+    prefill_chunk: int = 32        # streaming-admission chunk (tokens)
+    # --- KV movement -------------------------------------------------- #
+    move_chunk_tokens: int = 16    # reactive spill granularity
+    async_movement: bool = True    # overlap pool-row copies with compute
+    # --- gManager / Algorithm 1 --------------------------------------- #
+    schedule_every: int = 4        # cluster steps between plan rounds
+    heartbeat_timeout: float = 3.0
+    beta_thres: int | None = None  # debtor batch threshold (None => max_batch)
+    mem_util_thres: float = 0.8    # creditor memory threshold
+    avg_new_req_len: int = 512     # batch-growth credit per freed token
+    max_stripes: int = 8           # creditors one plan may fan out to
+    reclaim_horizon_s: float = 1.0  # amortization window of reclaim gain
+    # --- frontend (LLMServer) ----------------------------------------- #
+    max_waiting: int = 256         # admission-queue bound (backpressure)
+    admission_policy: str = "queue"  # "queue" | "reject" when bounded out
+
+    def __post_init__(self):
+        if self.admission_policy not in ("queue", "reject"):
+            raise ValueError(
+                f"admission_policy must be 'queue' or 'reject', got "
+                f"{self.admission_policy!r}")
+        if self.max_local_len < 2 * self.block_size:
+            raise ValueError("max_local_len must cover >= 2 blocks")
+
+    @property
+    def beta_threshold(self) -> int:
+        return self.max_batch if self.beta_thres is None else self.beta_thres
+
+    def replace(self, **overrides) -> "ServingConfig":
+        return dataclasses.replace(self, **overrides)
+
+    # --- presets ------------------------------------------------------ #
+    @classmethod
+    def smoke(cls, **overrides) -> "ServingConfig":
+        """CPU smoke scale: tiny pools so every path triggers fast."""
+        base = dict(n_instances=2, max_batch=3, max_local_len=32,
+                    pool_blocks=48, block_size=8, prefill_chunk=8,
+                    move_chunk_tokens=8, schedule_every=4,
+                    heartbeat_timeout=1e9, avg_new_req_len=16,
+                    max_waiting=64)
+        base.update(overrides)
+        return cls(**base)
+
+    @classmethod
+    def v5e(cls, **overrides) -> "ServingConfig":
+        """Paper-regime deployment shape (one v5e-8 instance pool)."""
+        base = dict(n_instances=4, max_batch=64, max_local_len=32_768,
+                    pool_blocks=8192, block_size=16, prefill_chunk=512,
+                    move_chunk_tokens=256, schedule_every=8,
+                    heartbeat_timeout=3.0, avg_new_req_len=512,
+                    max_waiting=1024)
+        base.update(overrides)
+        return cls(**base)

@@ -122,6 +122,33 @@ def _sample_batch(key, logits, temps):
     return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy), key
 
 
+@functools.partial(jax.jit, donate_argnames=("key",))
+def _sample_batch_topk(key, logits, temps, top_ks):
+    """``_sample_batch`` with a per-slot top-k filter: everything below
+    each row's k-th largest logit is masked before sampling (k == 0
+    keeps the full distribution). Separate jit so batches with no
+    top-k slot — the common case — never pay the vocab sort; the key
+    stays donated either way."""
+    key, sub = jax.random.split(key)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temps > 0, temps, 1.0)
+    lg = logits.astype(jnp.float32)
+    vocab = lg.shape[-1]
+    desc = jnp.sort(lg, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        desc, jnp.clip(top_ks - 1, 0, vocab - 1)[:, None], axis=-1)
+    lg = jnp.where((top_ks[:, None] > 0) & (lg < kth), -jnp.inf, lg)
+    keys = jax.random.split(sub, lg.shape[0])
+    sampled = jax.vmap(jax.random.categorical)(keys,
+                                               lg / safe_t[:, None])
+    return jnp.where(temps > 0, sampled.astype(jnp.int32), greedy), key
+
+
+# Sentinel return of a streaming admission aborted by cancellation
+# (distinct from None, which means cluster-wide OOM).
+_CANCELLED = object()
+
+
 class InstanceEngine:
     """One serving instance (model replica)."""
 
@@ -190,6 +217,10 @@ class InstanceEngine:
     def _admit_one(self) -> bool:
         if not self.waiting:
             return False
+        # Cancelled while queued: retire without spending any compute.
+        if self.waiting[0].cancelled:
+            self._cancel_finalize(self.waiting.pop(0))
+            return True
         slot = self._free_slot()
         if slot is None:
             return False
@@ -208,6 +239,7 @@ class InstanceEngine:
             return False
         if n_over and (not self._can_pool or self.prefix_sink is None):
             req.state = RequestState.FAILED      # cannot span: no KV pool
+            req.finish_time = time.monotonic()
             self.waiting.pop(0)
             self._finished_events.append(req.req_id)
             return True
@@ -217,7 +249,11 @@ class InstanceEngine:
             logits = self._admit_streaming(req, n_over, n_local)
             if logits is None:                   # cluster-wide OOM
                 req.state = RequestState.FAILED
+                req.finish_time = time.monotonic()
                 self._finished_events.append(req.req_id)
+                return True
+            if logits is _CANCELLED:             # aborted mid-prefill
+                self._cancel_finalize(req)
                 return True
         else:
             logits = self._admit_dense(req, slot, T, n_local)
@@ -247,16 +283,21 @@ class InstanceEngine:
         return logits
 
     def _admit_streaming(self, req: Request, n_over: int,
-                         n_local: int) -> Optional[jax.Array]:
+                         n_local: int):
         """Dense/moe admission: reserve every block, then stream chunks.
 
         All placement decisions happen BEFORE any compute: creditor
         blocks for the overflow prefix are committed via the
         reserve-then-stream ``prefix_sink`` and the local tail's blocks
         are allocated here, so a failed admission costs zero FLOPs.
-        Returns the final chunk's logits, or None on cluster-wide OOM.
+        Returns the final chunk's logits, None on cluster-wide OOM, or
+        the ``_CANCELLED`` sentinel when the request was cancelled
+        mid-stream — in that case every reservation (local blocks AND
+        committed creditor spans) is rolled back here, allocator state
+        restored exactly.
         """
         rid = req.req_id
+        req.state = RequestState.PREFILLING
         sink = None
         if n_over:
             sink = self.prefix_sink(req, n_over)
@@ -265,6 +306,14 @@ class InstanceEngine:
         ok = self.rmanager.pool.append_tokens(rid, n_local)
         assert ok, "free_count was checked before the pop"
         logits = self._stream_prefill(req, n_over, n_local, sink)
+        if logits is _CANCELLED:
+            # Abort the in-flight admission: drain staged creditor
+            # writes, drop the committed spans (metadata release — the
+            # all-or-nothing machinery's rollback), free local blocks.
+            if sink is not None:
+                sink.abort()
+            self.rmanager.release_request(rid)
+            return _CANCELLED
         if sink is not None:
             self.remote_insts[rid] = list(sink.rank_ids)
             L, K, hd = (self.cfg.num_layers, self.cfg.num_kv_heads,
@@ -293,6 +342,10 @@ class InstanceEngine:
                                for d in cred_ids]
         logits = None
         for t0 in range(0, T, C):
+            if req.cancelled:
+                # Cooperative abort point: between chunks, before any
+                # more compute or creditor writes are dispatched.
+                return _CANCELLED
             t1 = min(t0 + C, T)
             n_valid = t1 - t0
             toks = np.zeros(C, np.int32)
@@ -343,14 +396,21 @@ class InstanceEngine:
         temps = jnp.asarray(
             [(r.sampling.temperature if r is not None else 0.0)
              for r in reqs], jnp.float32)
-        toks, self._key = _sample_batch(self._key, logits, temps)
+        ks = [(r.sampling.top_k if r is not None else 0) for r in reqs]
+        if any(ks):
+            toks, self._key = _sample_batch_topk(
+                self._key, logits, temps, jnp.asarray(ks, jnp.int32))
+        else:
+            toks, self._key = _sample_batch(self._key, logits, temps)
         return np.asarray(toks)
 
     def _emit(self, req: Request, tok: int) -> None:
         req.output.append(tok)
-        eos = req.sampling.eos_token
-        if (len(req.output) >= req.sampling.max_new_tokens
-                or (eos is not None and tok == eos)):
+        req.token_times.append(time.monotonic())
+        s = req.sampling
+        if (len(req.output) >= s.max_new_tokens
+                or (s.eos_token is not None and tok == s.eos_token)
+                or tok in s.stop_tokens):
             self._finish(req)
 
     def _finish(self, req: Request) -> None:
@@ -360,7 +420,36 @@ class InstanceEngine:
 
     def _fail(self, req: Request) -> None:
         req.state = RequestState.FAILED
+        req.finish_time = time.monotonic()
         self._release_slot(req)
+
+    def _cancel_finalize(self, req: Request) -> None:
+        """Terminal bookkeeping shared by every cancellation path."""
+        req.state = RequestState.CANCELLED
+        req.finish_time = time.monotonic()
+        self._release_slot(req)
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request this engine holds (waiting or running).
+
+        Returns True when the request was retired HERE (slot released,
+        local blocks freed, finished event queued). A request that is
+        mid-streaming-prefill only gets its flag set — the chunk loop
+        aborts and rolls back at its next cooperative check. Creditor-
+        hosted spans are the cluster's to release (it sees the finished
+        event, exactly once, like any other terminal state).
+        """
+        if req.done:
+            return False
+        req.cancelled = True
+        if req in self.waiting:
+            self.waiting.remove(req)
+            self._cancel_finalize(req)
+            return True
+        if req.slot is not None and self.slots[req.slot] is req:
+            self._cancel_finalize(req)
+            return True
+        return False
 
     def _release_slot(self, req: Request) -> None:
         if req.slot is not None:
@@ -441,6 +530,11 @@ class InstanceEngine:
 
     def step(self) -> int:
         """Admit + one decode iteration. Returns #tokens generated."""
+        # Retire slots whose cancel flag was set since the last step
+        # (e.g. from a streaming consumer) before any decode compute.
+        for r in list(self.slots):
+            if r is not None and r.cancelled and not r.done:
+                self._cancel_finalize(r)
         while self._admit_one():
             pass
         if not self.running:

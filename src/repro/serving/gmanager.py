@@ -147,8 +147,15 @@ class GManager:
                 req_spans=req_spans))
         return views
 
-    def plan_moves(self) -> List[MoveKVCache]:
-        moves = self.scheduler.plan(self._views())
+    def plan_moves(self, urgency: Optional[Dict[int, float]] = None
+                   ) -> List[MoveKVCache]:
+        """Run Algorithm 1 against the current heartbeat views.
+
+        ``urgency`` (req_id -> score, from the serving frontend's
+        priority/deadline lifecycle) biases the planner: higher-urgency
+        requests are picked for memory relief first.
+        """
+        moves = self.scheduler.plan(self._views(), urgency=urgency)
         return [MoveKVCache(m.req_id, m.src,
                             [MoveLeg(leg.dst, leg.num_blocks)
                              for leg in m.legs], kind=m.kind)

@@ -66,4 +66,8 @@ class MoveKVCache:
 class MoveResult(enum.Enum):
     OK = "ok"
     REJECTED = "rejected"          # dst out of space (stale global view)
-    GONE = "gone"                  # request finished/failed meanwhile
+    # Request reached a terminal state (finished / failed / CANCELLED)
+    # between planning and execution: the plan is invalidated before any
+    # reservation is made, so a cancel racing a striped move can never
+    # leave orphan reservations.
+    GONE = "gone"

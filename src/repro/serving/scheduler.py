@@ -247,17 +247,22 @@ class GreedyScheduler:
 
     # ------------------------------------------------------------------ #
     def _plan_offloads(self, debtors: List[InstanceView],
-                       creditors: List[InstanceView]) -> List[StripedMove]:
+                       creditors: List[InstanceView],
+                       urgency: Dict[int, float]) -> List[StripedMove]:
         moves: List[StripedMove] = []
         for d in debtors:
             if not d.requests or len(moves) >= self.max_moves:
                 continue
-            # Longest owned request on the debtor.
+            # The debtor's most urgent owned request (frontend priority
+            # + deadline proximity), length as the tie-break — without
+            # lifecycle metadata this reduces to the original
+            # longest-request pick.
             owned = [(rid, ln, blk) for rid, (ln, blk, own)
                      in d.requests.items() if own and blk > 1]
             if not owned:
                 continue
-            rid, _, rblocks = max(owned, key=lambda t: t[1])
+            rid, _, rblocks = max(
+                owned, key=lambda t: (urgency.get(t[0], 0.0), t[1]))
             block_budget = rblocks - 1          # keep the live tail local
             # Candidate creditors, emptiest first, capped at max_stripes
             # (headroom-capped: never fill a creditor past what leaves
@@ -425,17 +430,27 @@ class GreedyScheduler:
                                          kind="reclaim"))
         return moves
 
-    def plan(self, views: List[InstanceView]) -> List[StripedMove]:
+    def plan(self, views: List[InstanceView],
+             urgency: Optional[Dict[int, float]] = None
+             ) -> List[StripedMove]:
         # Work on copies: the caller's heartbeat-fed views stay pristine
         # so the gManager can re-plan from the same state.
+        urgency = urgency or {}
         views = [v.copy() for v in views if v.alive]
+
+        def inst_urgency(v: InstanceView) -> float:
+            return max((urgency.get(rid, 0.0)
+                        for rid, (_, _, own) in v.requests.items()
+                        if own), default=0.0)
         # A debtor must have something to offload: an idle instance with
         # no owned requests is a creditor candidate, not a debtor.
+        # Near-deadline/high-priority debtors are planned first so they
+        # get creditor capacity before best-effort ones exhaust it.
         debtors = sorted([v for v in views
                           if v.batch_size <= self.beta_thres
                           and any(own for (_, _, own)
                                   in v.requests.values())],
-                         key=lambda v: v.batch_size)
+                         key=lambda v: (-inst_urgency(v), v.batch_size))
         creditors = sorted([v for v in views
                             if v.mem_util <= self.mem_util_thres],
                            key=lambda v: v.mem_util)
@@ -455,5 +470,5 @@ class GreedyScheduler:
                     and v.mem_util > stress_thres]
         moves = self._plan_reclaims(views, stressed, creditors)
         creditors.sort(key=lambda v: v.mem_util)
-        moves += self._plan_offloads(debtors, creditors)
+        moves += self._plan_offloads(debtors, creditors, urgency)
         return moves[:self.max_moves]

@@ -1,0 +1,281 @@
+"""Request-lifecycle frontend (ISSUE-5): cancellation propagation
+through every layer, sampling extensions, and lifecycle-fed scheduling.
+
+Covers the satellite checklist:
+  (a) cancel mid-streaming-prefill — the chunk loop aborts between
+      chunks, PrefixSink creditor reservations are rolled back via the
+      all-or-nothing machinery, and every pool allocator is restored
+      EXACTLY to its pre-admission state;
+  (b) cancel a request with creditor-hosted spans — spans are released
+      exactly once (the allocator's double-free guard would raise);
+  (c) cancel racing a planned striped move — the plan resolves
+      ``MoveResult.GONE`` before any reservation, no orphans;
+  (d) ``SamplingParams.stop_tokens``/``top_k`` against the dense
+      oracle (donated-key discipline is asserted in test_zero_copy);
+  (e) priority/deadline urgency feeds Algorithm-1's offload ordering.
+"""
+import collections
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serving.cluster as cluster_mod
+from repro.configs import get_config, get_smoke_config
+from repro.models.model import decode_step, init_params
+from repro.models.prefill import prefill
+from repro.serving import (InstanceEngine, InstancePerfModel, LLMServer,
+                           Request, RequestState, SamplingParams,
+                           ServingConfig)
+from repro.serving.kvpool import BlockAllocator
+from repro.serving.protocol import MoveKVCache, MoveLeg, MoveResult
+from repro.serving.scheduler import GreedyScheduler, InstanceView
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def _alloc_snapshot(cluster):
+    out = {}
+    for i, e in cluster.engines.items():
+        a = e.rmanager.pool.alloc
+        out[i] = (a.used_count, a.reserved, sorted(a._free),
+                  {r: list(rb.blocks)
+                   for r, rb in e.rmanager.pool.requests.items()})
+    return out
+
+
+# ------------------------------------------------------------------ #
+# (a) Cancel mid-streaming-prefill: exact allocator rollback
+# ------------------------------------------------------------------ #
+def test_cancel_mid_streaming_prefill_rolls_back_exactly(setup,
+                                                         monkeypatch):
+    cfg, params = setup
+    rng = np.random.default_rng(30)
+    # 40-token prompt, 16-token quota: admission commits a 28-token
+    # (7-block) prefix on the creditor BEFORE compute, then streams
+    # 8-token chunks through PrefixSink.write.
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        max_batch=2, max_local_len=16, pool_blocks=32, block_size=4))
+    cl = server.cluster
+    before = _alloc_snapshot(cl)
+
+    writes = []
+    orig_write = cluster_mod.PrefixSink.write
+
+    def write_then_cancel(self, t0, k, v):
+        orig_write(self, t0, k, v)
+        writes.append(t0)
+        # Cancel lands while the streaming prefill is IN FLIGHT: the
+        # admission must abort at the next chunk boundary.
+        server.cancel(self._req_id)
+
+    monkeypatch.setattr(cluster_mod.PrefixSink, "write",
+                        write_then_cancel)
+    h = server.submit(rng.integers(0, cfg.vocab_size, 40).tolist(),
+                      SamplingParams(max_new_tokens=8))
+    server.step()
+    assert writes, "scenario never streamed a creditor chunk"
+    assert len(writes) < 4, "admission ran to completion despite cancel"
+    assert h.status == RequestState.CANCELLED
+    # Creditor reservations AND the owner's local tail blocks are gone;
+    # allocator state (counts, free lists, request maps) is EXACTLY the
+    # pre-admission state.
+    assert _alloc_snapshot(cl) == before
+    # The cluster keeps serving: a fresh request admits and finishes.
+    h2 = server.submit(rng.integers(0, cfg.vocab_size, 10).tolist(),
+                       SamplingParams(max_new_tokens=4))
+    assert h2.result() and h2.status == RequestState.FINISHED
+
+
+# ------------------------------------------------------------------ #
+# (b) Cancel with hosted spans: released exactly once
+# ------------------------------------------------------------------ #
+def test_cancel_with_hosted_spans_releases_once(setup, monkeypatch):
+    cfg, params = setup
+    rng = np.random.default_rng(31)
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        max_batch=2, max_local_len=16, pool_blocks=32, block_size=4))
+    cl = server.cluster
+    before = _alloc_snapshot(cl)
+    h = server.submit(rng.integers(0, cfg.vocab_size, 40).tolist(),
+                      SamplingParams(max_new_tokens=32))
+    for tok in h.tokens():
+        if len(h._req.output) >= 3:
+            break
+    creditors = [e for e in cl.engines.values()
+                 if e.rmanager.is_hosting(h.req_id)]
+    assert creditors, "scenario produced no hosted span"
+    span_blocks = {(e.inst_id, b) for e in creditors
+                   for b in e.rmanager.pool.requests[h.req_id].blocks}
+
+    frees = collections.Counter()
+    orig_free = BlockAllocator.free
+
+    def spy_free(self, blocks):
+        for b in blocks:
+            frees[(id(self), b)] += 1
+        orig_free(self, blocks)
+
+    monkeypatch.setattr(BlockAllocator, "free", spy_free)
+    alloc_ids = {e.inst_id: id(e.rmanager.pool.alloc)
+                 for e in cl.engines.values()}
+    assert h.cancel()
+    # Drain paths (finished events, schedule rounds) must not re-free.
+    for _ in range(4):
+        server.step()
+    assert h.status == RequestState.CANCELLED
+    for inst, b in span_blocks:
+        assert frees[(alloc_ids[inst], b)] == 1, \
+            f"hosted block {b} on inst {inst} freed " \
+            f"{frees[(alloc_ids[inst], b)]}x"
+    assert not any(e.rmanager.is_hosting(h.req_id)
+                   for e in cl.engines.values())
+    assert _alloc_snapshot(cl) == before
+
+
+# ------------------------------------------------------------------ #
+# (c) Cancel racing a planned striped move: GONE, no orphans
+# ------------------------------------------------------------------ #
+def test_cancel_racing_planned_move_resolves_gone(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(32)
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, max_local_len=64, pool_blocks=16,
+        block_size=4, schedule_every=10 ** 9))
+    cl = server.cluster
+    h = server.submit(rng.integers(0, cfg.vocab_size, 40).tolist(),
+                      SamplingParams(max_new_tokens=8))
+    server.step()
+    owner_id = next(i for i, e in cl.engines.items()
+                    if h._req in e.running)
+    others = [i for i in cl.engines if i != owner_id]
+    # A striped plan exists (as if emitted by the gManager)...
+    plan = MoveKVCache(h.req_id, owner_id,
+                       [MoveLeg(others[0], 2), MoveLeg(others[1], 2)])
+    # ...but the request is cancelled before the runtime executes it.
+    assert h.cancel()
+    snap = _alloc_snapshot(cl)
+    assert cl._execute_move(plan) == MoveResult.GONE
+    assert _alloc_snapshot(cl) == snap, \
+        "GONE plan touched allocator state"
+    assert all(e.rmanager.pool.alloc.reserved == 0
+               for e in cl.engines.values())
+
+
+# ------------------------------------------------------------------ #
+# (d) SamplingParams extensions vs the dense oracle
+# ------------------------------------------------------------------ #
+def test_top_k_one_matches_greedy_oracle(setup):
+    """top_k=1 collapses stochastic sampling onto the argmax: the
+    stream must equal the greedy dense-oracle reference exactly."""
+    cfg, params = setup
+    rng = np.random.default_rng(33)
+    prompt = list(rng.integers(0, cfg.vocab_size, 9))
+    n_new = 8
+    ref = _greedy_reference(params, cfg, prompt, n_new)
+    eng = InstanceEngine(params, cfg, max_batch=2, max_local_len=64,
+                         pool_blocks=32, block_size=8, prefill_chunk=8)
+    req = Request(prompt=prompt, sampling=SamplingParams(
+        max_new_tokens=n_new, temperature=0.9, top_k=1))
+    eng.submit(req)
+    for _ in range(30):
+        if req.done:
+            break
+        eng.step()
+    assert req.state == RequestState.FINISHED
+    assert req.output == ref, "top_k=1 sampling diverged from argmax"
+
+
+def test_top_k_filter_stays_in_top_set():
+    """With top_k=3 every sampled token is one of the 3 highest-logit
+    tokens of the matching oracle step (float32 so paged-vs-dense
+    rounding cannot reorder near-tied logits)."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(34)
+    prompt = list(rng.integers(0, cfg.vocab_size, 7))
+    n_new = 6
+    eng = InstanceEngine(params, cfg, max_batch=2, max_local_len=64,
+                         pool_blocks=32, block_size=8, prefill_chunk=8)
+    req = Request(prompt=prompt, sampling=SamplingParams(
+        max_new_tokens=n_new, temperature=1.5, top_k=3))
+    eng.submit(req)
+    for _ in range(30):
+        if req.done:
+            break
+        eng.step()
+    assert req.state == RequestState.FINISHED
+    # Re-derive each step's top-3 with the dense reference, following
+    # the engine's own sampled prefix.
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    for i, tok in enumerate(req.output):
+        top3 = set(np.argsort(np.asarray(logits[0]))[-3:].tolist())
+        assert tok in top3, f"step {i}: {tok} outside top-3 {top3}"
+        logits, state = decode_step(params, cfg, state,
+                                    jnp.asarray([tok], jnp.int32))
+
+
+def test_stop_tokens_terminate_generation(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(35)
+    prompt = list(rng.integers(0, cfg.vocab_size, 11))
+    ref = _greedy_reference(params, cfg, prompt, 8)
+    stop = ref[2]
+    eng = InstanceEngine(params, cfg, max_batch=2, max_local_len=64,
+                         pool_blocks=32, block_size=8, prefill_chunk=8)
+    req = Request(prompt=prompt, sampling=SamplingParams(
+        max_new_tokens=8, stop_tokens=(stop,)))
+    eng.submit(req)
+    for _ in range(30):
+        if req.done:
+            break
+        eng.step()
+    assert req.state == RequestState.FINISHED
+    assert req.output == ref[:3], \
+        "generation did not stop at the stop token"
+
+
+# ------------------------------------------------------------------ #
+# (e) Priority/deadline urgency orders Algorithm-1 offloads
+# ------------------------------------------------------------------ #
+def test_urgent_request_offloaded_first():
+    cfg = get_config("olmo-1b")
+    bs = 512
+    sched = GreedyScheduler(InstancePerfModel(cfg), block_size=bs,
+                            beta_thres=8, mem_util_thres=0.5)
+    debtor = InstanceView(inst_id=0, batch_size=2, mem_blocks_total=110,
+                          mem_blocks_used=105,
+                          requests={7: (bs * 60, 60, True),
+                                    8: (bs * 45, 45, True)})
+    creditor = InstanceView(inst_id=1, batch_size=16,
+                            mem_blocks_total=100, mem_blocks_used=10,
+                            requests={9: (bs * 10, 10, True)})
+    # Without lifecycle metadata the longest request (7) is picked.
+    base = sched.plan([debtor, creditor])
+    assert base and base[0].req_id == 7
+    # A near-deadline short request outranks it.
+    urgent = sched.plan([debtor, creditor], urgency={8: 100.0})
+    assert urgent and urgent[0].req_id == 8, \
+        "deadline urgency did not reorder the offload pick"

@@ -10,7 +10,8 @@ from repro.configs import get_smoke_config
 from repro.kernels.ops import paged_micro_attention
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import decode_step_dist, decode_step_paged, prefill
-from repro.serving import Cluster, Request, RequestState, SamplingParams
+from repro.serving import (Cluster, Request, RequestState, SamplingParams,
+                           ServingConfig)
 from repro.serving.kvpool import (RankKVPool, build_local_tables,
                                   read_pool_rows, table_bucket,
                                   write_pool_rows)
@@ -153,8 +154,8 @@ def test_move_is_metadata_only(setup):
     n_new = 20
     ref = _greedy_reference(params, cfg, prompt, n_new)
 
-    cl = Cluster(params, cfg, n_instances=2, max_batch=2, max_local_len=32,
-                 pool_blocks=32, block_size=8, move_chunk_tokens=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        max_batch=2, pool_blocks=32))
     req = Request(prompt=prompt, sampling=SamplingParams(max_new_tokens=n_new))
     cl.submit(req)
 
@@ -201,8 +202,9 @@ def test_recompile_count_bounded_by_buckets(setup):
     cfg, params = setup
     rng = np.random.default_rng(5)
     # Distinctive shapes so this test's traces are not already cached.
-    cl = Cluster(params, cfg, n_instances=2, max_batch=2, max_local_len=12,
-                 pool_blocks=24, block_size=4, move_chunk_tokens=4)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        max_batch=2, max_local_len=12, pool_blocks=24, block_size=4,
+        move_chunk_tokens=4, prefill_chunk=32))
     req = Request(prompt=list(rng.integers(0, cfg.vocab_size, size=10)),
                   sampling=SamplingParams(max_new_tokens=26))
     before = prefill_mod.paged_trace_count()

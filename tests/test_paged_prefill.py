@@ -19,7 +19,7 @@ from repro.configs import get_smoke_config
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import prefill, prefill_chunk_paged
 from repro.serving import (Cluster, InstanceEngine, Request, RequestState,
-                           SamplingParams)
+                           SamplingParams, ServingConfig)
 from repro.serving.kvpool import (RankKVPool, prefix_tables, read_pool_rows,
                                   rows_for_token_range, scatter_pool_rows,
                                   table_bucket)
@@ -169,9 +169,9 @@ def test_prefix_stripes_across_two_creditors_and_decodes():
 
     # Owner quota 16 (bs=4) => 28-token prefix = 7 blocks, but each
     # creditor pool only has 6 blocks: admission must stripe across 2.
-    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=16,
-                 pool_blocks=6, block_size=4, move_chunk_tokens=8,
-                 prefill_chunk=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, max_local_len=16, pool_blocks=6,
+        block_size=4))
     req = Request(prompt=prompt, sampling=SamplingParams(max_new_tokens=n_new))
     cl.submit(req)
     traces_before = prefill_mod.prefill_chunk_trace_count()
@@ -202,8 +202,9 @@ def test_cluster_oom_prefix_fails_cleanly():
     and every reservation is rolled back."""
     cfg, params = _setup("olmo-1b")
     rng = np.random.default_rng(3)
-    cl = Cluster(params, cfg, n_instances=1, max_batch=2, max_local_len=16,
-                 pool_blocks=8, block_size=4, prefill_chunk=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=1, max_batch=2, max_local_len=16, pool_blocks=8,
+        block_size=4))
     req = Request(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
                   sampling=SamplingParams(max_new_tokens=4))
     cl.submit(req)

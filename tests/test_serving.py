@@ -1,5 +1,6 @@
 """Serving stack integration: engine, cluster DistAttention spanning,
-KV movement, fault tolerance, elasticity."""
+KV movement, fault tolerance, elasticity, and the LLMServer frontend
+(submit -> stream -> cancel, with allocator state verified clean)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +9,8 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import prefill
-from repro.serving import (Cluster, InstanceEngine, Request, RequestState,
-                           SamplingParams)
+from repro.serving import (Cluster, InstanceEngine, LLMServer, Request,
+                           RequestState, SamplingParams, ServingConfig)
 
 
 @pytest.fixture(scope="module")
@@ -68,8 +69,8 @@ def test_cluster_spanning_request_matches_reference(setup):
 
     # max_local_len=32 < 40-token prompt: spills at prefill AND moves
     # reactively during decode.
-    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=32,
-                 pool_blocks=32, block_size=8, move_chunk_tokens=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, pool_blocks=32))
     req = Request(prompt=long_prompt,
                   sampling=SamplingParams(max_new_tokens=n_new))
     cl.submit(req)
@@ -90,8 +91,7 @@ def test_cluster_mixed_load_all_finish(setup):
         reqs.append(Request(prompt=list(rng.integers(0, cfg.vocab_size,
                                                      size=n)),
                             sampling=SamplingParams(max_new_tokens=8)))
-    cl = Cluster(params, cfg, n_instances=2, max_batch=3, max_local_len=32,
-                 pool_blocks=48, block_size=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(move_chunk_tokens=16))
     for r in reqs:
         cl.submit(r)
     cl.run_until_done(max_steps=300)
@@ -107,8 +107,9 @@ def test_cluster_instance_failure_recovers(setup):
     n_new = 10
     ref = _greedy_reference(params, cfg, prompt, n_new)
 
-    cl = Cluster(params, cfg, n_instances=2, max_batch=2, max_local_len=64,
-                 pool_blocks=32, block_size=8, heartbeat_timeout=0.0)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        max_batch=2, max_local_len=64, pool_blocks=32,
+        heartbeat_timeout=0.0))
     req = Request(prompt=prompt, sampling=SamplingParams(max_new_tokens=n_new))
     cl.submit(req)
     for _ in range(4):
@@ -124,11 +125,113 @@ def test_cluster_instance_failure_recovers(setup):
     assert len(joined) >= n_new
 
 
+# ------------------------------------------------------------------ #
+# LLMServer frontend: submit -> stream -> cancel end to end
+# ------------------------------------------------------------------ #
+def _pools_clean(cluster, req_id):
+    """No engine holds blocks or reservations for req_id."""
+    for eng in cluster.engines.values():
+        if req_id in eng.rmanager.pool.requests:
+            return False
+        if eng.rmanager.pool.alloc.reserved != 0:
+            return False
+    return True
+
+
+def test_server_submit_stream_cancel_end_to_end(setup):
+    """The acceptance flow: submit through LLMServer, stream tokens
+    incrementally off the engine's emit path, cancel mid-generation,
+    and verify the pool allocators are clean after the cancellation
+    while the surviving request still matches the greedy oracle."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    keep_prompt = list(rng.integers(0, cfg.vocab_size, size=7))
+    n_new = 10
+    ref = _greedy_reference(params, cfg, keep_prompt, n_new)
+
+    server = LLMServer(params, cfg, ServingConfig.smoke(max_batch=2))
+    keep = server.submit(keep_prompt, SamplingParams(max_new_tokens=n_new))
+    victim = server.submit(list(rng.integers(0, cfg.vocab_size, size=9)),
+                           SamplingParams(max_new_tokens=64),
+                           priority=1, deadline_s=60.0)
+
+    streamed = []
+    for tok in keep.tokens():
+        streamed.append(tok)
+        if len(victim._req.output) >= 3 and not victim.done:
+            assert victim.status == RequestState.RUNNING
+            assert victim.cancel()
+            # Terminal immediately; engine slot + local blocks released.
+            assert victim.status == RequestState.CANCELLED
+            assert _pools_clean(server.cluster, victim.req_id)
+    assert streamed == ref, "streamed tokens diverged from the oracle"
+    assert keep.result() == ref
+    assert keep.status == RequestState.FINISHED
+    assert victim.status == RequestState.CANCELLED
+    assert 3 <= len(victim._req.output) < 64
+    # Cancel of a terminal request is a no-op.
+    assert not victim.cancel()
+    assert _pools_clean(server.cluster, victim.req_id)
+    # Per-request lifecycle metrics are real (satellite: arrival/finish).
+    for h in (keep, victim):
+        m = h.metrics
+        assert m["arrival_time"] > 0.0 and m["finish_time"] >= \
+            m["arrival_time"]
+        assert m["ttft"] >= 0.0 and m["e2e"] >= m["ttft"]
+    assert keep.metrics["n_tokens"] == n_new
+
+
+def test_server_ids_are_per_server_and_deterministic(setup):
+    """Two servers in one process get independent dense id spaces
+    (module-global counter drift is gone); bare Request() still works."""
+    cfg, params = setup
+    s1 = LLMServer(params, cfg, ServingConfig.smoke(n_instances=1))
+    s2 = LLMServer(params, cfg, ServingConfig.smoke(n_instances=1))
+    h1 = [s1.submit([1, 2, 3]), s1.submit([4, 5])]
+    h2 = [s2.submit([6]), s2.submit([7, 8])]
+    assert [h.req_id for h in h1] == [0, 1]
+    assert [h.req_id for h in h2] == [0, 1]
+    r = Request(prompt=[1])             # standalone construction survives
+    assert isinstance(r.req_id, int)
+
+
+def test_server_backpressure_reject_policy(setup):
+    cfg, params = setup
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=1, max_batch=2, max_waiting=2,
+        admission_policy="reject"))
+    handles = [server.submit([1, 2, 3], SamplingParams(max_new_tokens=2))
+               for _ in range(5)]
+    rejected = [h for h in handles if h.status == RequestState.FAILED]
+    assert len(rejected) == 3 and server.rejected == 3
+    server.drain()
+    accepted = [h for h in handles if h not in rejected]
+    assert all(h.status == RequestState.FINISHED for h in accepted)
+
+
+def test_server_open_loop_run_records_latency_metrics(setup):
+    cfg, params = setup
+    from repro.serving import Arrival
+    rng = np.random.default_rng(8)
+    arrivals = [Arrival(at=0.02 * i,
+                        prompt=list(rng.integers(0, cfg.vocab_size, 5)),
+                        sampling=SamplingParams(max_new_tokens=4))
+                for i in range(4)]
+    server = LLMServer(params, cfg, ServingConfig.smoke(n_instances=1,
+                                                        max_batch=2))
+    stats = server.run(arrivals)
+    assert stats["finished"] == 4 and stats["tokens"] == 16
+    assert stats["ttft_p50"] > 0.0 and stats["ttft_p99"] >= \
+        stats["ttft_p50"]
+    assert stats["tbt_p99"] > 0.0
+    assert stats["deadline_missed"] == 0
+
+
 def test_cluster_elastic_scale_out(setup):
     cfg, params = setup
     rng = np.random.default_rng(4)
-    cl = Cluster(params, cfg, n_instances=1, max_batch=2, max_local_len=32,
-                 pool_blocks=16, block_size=8)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=1, max_batch=2, pool_blocks=16))
     # Too long for one instance's pool: needs the new creditor.
     req = Request(prompt=list(rng.integers(0, cfg.vocab_size, size=30)),
                   sampling=SamplingParams(max_new_tokens=16))

@@ -62,9 +62,11 @@ def test_decode_time_striping_across_two_creditors_exact(seed):
     # dwarfs the microscopic KV times and the model (correctly) refuses
     # to stripe; avg_new_req_len=4 makes freed blocks admit modeled work.
     perf = InstancePerfModel(cfg, alpha_hop=0.0)
-    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=64,
-                 pool_blocks=16, block_size=4, schedule_every=4,
-                 avg_new_req_len=4, perf=perf)
+    from repro.serving import ServingConfig
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, max_local_len=64, pool_blocks=16,
+        block_size=4, schedule_every=4, avg_new_req_len=4,
+        move_chunk_tokens=16, prefill_chunk=32), perf=perf)
     executed = []
     orig_exec = cl._execute_move
 
@@ -122,13 +124,15 @@ def test_striped_move_rejected_leg_rolls_back_exactly():
     import jax
 
     from repro.models.model import init_params
-    from repro.serving import Cluster, Request, SamplingParams
+    from repro.serving import Cluster, Request, SamplingParams, ServingConfig
 
     cfg = get_smoke_config("olmo-1b")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(3)
-    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=64,
-                 pool_blocks=16, block_size=4, schedule_every=10 ** 9)
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, max_local_len=64, pool_blocks=16,
+        block_size=4, schedule_every=10 ** 9, move_chunk_tokens=16,
+        prefill_chunk=32))
     req = Request(prompt=list(rng.integers(0, cfg.vocab_size, 40)),
                   sampling=SamplingParams(max_new_tokens=4))
     cl.submit(req)

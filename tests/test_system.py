@@ -4,7 +4,8 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
 from repro.models.model import init_params
-from repro.serving import Cluster, Request, RequestState, SamplingParams
+from repro.serving import (LLMServer, RequestState, SamplingParams,
+                           ServingConfig)
 
 
 def test_all_archs_registered_with_exact_dims():
@@ -25,13 +26,11 @@ def test_system_end_to_end_mixed_cluster():
     cfg = get_smoke_config("qwen3-0.6b")
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    cl = Cluster(params, cfg, n_instances=3, max_batch=2, max_local_len=32,
-                 pool_blocks=32, block_size=8, move_chunk_tokens=8)
-    reqs = [Request(prompt=list(rng.integers(0, cfg.vocab_size, size=n)),
-                    sampling=SamplingParams(max_new_tokens=6))
-            for n in (5, 50, 9)]
-    for r in reqs:
-        cl.submit(r)
-    cl.run_until_done(max_steps=300)
-    assert all(r.state == RequestState.FINISHED for r in reqs)
-    assert cl.throughput_stats["kv_moved_bytes"] > 0
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, pool_blocks=32))
+    handles = [server.submit(rng.integers(0, cfg.vocab_size, size=n).tolist(),
+                             SamplingParams(max_new_tokens=6))
+               for n in (5, 50, 9)]
+    server.drain(max_steps=300)
+    assert all(h.status == RequestState.FINISHED for h in handles)
+    assert server.cluster.throughput_stats["kv_moved_bytes"] > 0

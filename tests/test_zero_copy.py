@@ -22,7 +22,7 @@ from repro.kernels.ref import paged_prefill_micro_attention_ref
 from repro.models.model import decode_step, init_params
 from repro.models.prefill import prefill
 from repro.serving import (Cluster, InstanceEngine, Request, RequestState,
-                           SamplingParams)
+                           SamplingParams, ServingConfig)
 from repro.serving.engine import buffer_ptr
 from repro.serving.kvpool import scatter_pool_rows, write_pool_rows
 
@@ -200,9 +200,8 @@ def test_async_and_serial_movement_are_token_identical():
 
     outs, movers = [], []
     for overlap in (False, True):
-        cl = Cluster(params, cfg, n_instances=2, max_batch=2,
-                     max_local_len=32, pool_blocks=32, block_size=8,
-                     move_chunk_tokens=8, async_movement=overlap)
+        cl = Cluster(params, cfg, ServingConfig.smoke(
+            max_batch=2, pool_blocks=32, async_movement=overlap))
         reqs = [Request(prompt=p,
                         sampling=SamplingParams(max_new_tokens=n_new))
                 for p in prompts]
