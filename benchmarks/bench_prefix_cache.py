@@ -1,0 +1,202 @@
+"""Prefix-cache + host-DRAM tier benchmark (ISSUE 6 acceptance gates).
+
+Three measured sections on a real smoke-scale ``LLMServer``:
+
+  * warm-vs-cold TTFT — one tenant's long system prompt served cold,
+    then repeatedly warm: the radix cache pins the shared blocks and
+    admission streams only the tail, so warm TTFT must be >= 2x better
+    (gated as ``ttft_warm_cold_ratio``).
+  * token identity — every warm output is compared token-for-token
+    against a cache-disabled server on the same prompts; the cache may
+    never change what the model says (gated as ``token_identity``).
+  * host-tier overlap — a pool too small for the tenant working set
+    forces cache replicas to spill to host DRAM and prefetch back on
+    re-use; D2H/H2D is dispatched async behind decode, so the fraction
+    of prefetches that actually stall must stay <= 0.1 (gated as its
+    complement ``prefetch_overlap``).
+
+Plus a multi-tenant trace (``benchmarks.traces.gen_multitenant_trace``)
+through the open-loop pump, reporting the achieved hit-rate against the
+trace's reuse ceiling.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.serving import LLMServer, ServingConfig
+from repro.serving.request import SamplingParams
+
+try:
+    from benchmarks.benchjson import write_bench_json
+    from benchmarks.traces import gen_multitenant_trace, multitenant_arrivals
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+    from traces import gen_multitenant_trace, multitenant_arrivals
+
+PREFIX_LEN = 88          # 11 blocks of 8: the shared system prompt
+N_WARM = 4
+N_TENANTS = 3
+REUSE_P = 0.75
+
+
+def _server(params, cfg, **over):
+    base = dict(n_instances=1, max_batch=2, max_local_len=128,
+                pool_blocks=64, prefill_chunk=8,
+                prefix_cache=True, host_tier_blocks=128)
+    base.update(over)
+    return LLMServer(params, cfg, ServingConfig.smoke(**base))
+
+
+def run_warm_cold(params, cfg, csv=True):
+    """Cold prefill vs cached-prefix admission TTFT on one tenant."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, size=PREFIX_LEN).tolist()
+
+    def serve(server, tail_seed):
+        t_rng = np.random.default_rng(tail_seed)
+        prompt = prefix + t_rng.integers(0, cfg.vocab_size,
+                                         size=4).tolist()
+        h = server.submit(prompt, SamplingParams(max_new_tokens=6))
+        out = h.result()
+        return h.metrics["ttft"], prompt, out
+
+    warm_srv = _server(params, cfg)
+    serve(warm_srv, 999)                         # jit warm-up
+    cold_srv = _server(params, cfg)              # fresh cache: cold
+    ttft_cold, _, _ = serve(cold_srv, 0)
+    ttfts, outs, prompts = [], [], []
+    for i in range(N_WARM):                      # cold_srv now has the
+        t, p, o = serve(cold_srv, i)             # prefix cached: warm
+        ttfts.append(t)
+        prompts.append(p)
+        outs.append(o)
+    ttft_warm = sum(ttfts) / len(ttfts)
+    ratio = ttft_cold / max(ttft_warm, 1e-9)
+    # Token identity: the same prompts on a cache-disabled server.
+    ref_srv = _server(params, cfg, prefix_cache=False, host_tier_blocks=0)
+    identical = all(
+        ref_srv.submit(p, SamplingParams(max_new_tokens=6)).result() == o
+        for p, o in zip(prompts, outs))
+    hit_toks = cold_srv.metrics["cache_hit_tokens"]
+    if csv:
+        print("warmcold_metric,value")
+        print(f"ttft_cold_ms,{ttft_cold * 1e3:.2f}")
+        print(f"ttft_warm_ms,{ttft_warm * 1e3:.2f}")
+        print(f"ttft_warm_cold_ratio,{ratio:.2f}")
+        print(f"cache_hit_tokens,{hit_toks:.0f}")
+        print(f"token_identity,{float(identical):.0f}")
+    return dict(ttft_cold=ttft_cold, ttft_warm=ttft_warm, ratio=ratio,
+                token_identity=float(identical), hit_tokens=hit_toks)
+
+
+def run_host_overlap(params, cfg, csv=True):
+    """Spill the tenant working set to host DRAM, prefetch it back, and
+    measure how often a prefetch actually blocked decode."""
+    import numpy as np
+    srv = _server(params, cfg, pool_blocks=18, max_batch=1,
+                  host_tier_blocks=256)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=40).tolist()
+               for _ in range(4)]
+    outs = []
+    for p in prompts:                            # cold: fills + spills
+        outs.append(srv.submit(p, SamplingParams(max_new_tokens=4))
+                    .result())
+    warm_ok = True
+    for p, o in zip(prompts, outs):              # warm: prefetch chains
+        warm_ok &= srv.submit(p, SamplingParams(max_new_tokens=4)) \
+            .result() == o
+    ts = srv.cluster.host_tier.stats
+    stg = srv.cluster.stager
+    prefetch_ops = ts.fetches + stg.stalls.get("prefetch", 0)
+    stalls = ts.fetch_stalls + stg.stalls.get("prefetch", 0)
+    stall_ratio = stalls / max(1, ts.fetches)
+    m = srv.metrics
+    if csv:
+        print("hosttier_metric,value")
+        print(f"spill_bytes,{m['host_spill_bytes']:.0f}")
+        print(f"prefetch_bytes,{m['host_prefetch_bytes']:.0f}")
+        print(f"fetches,{ts.fetches}")
+        print(f"fetch_stalls,{stalls}")
+        print(f"prefetch_stall_ratio,{stall_ratio:.3f}")
+        print(f"warm_identical,{float(warm_ok):.0f}")
+    assert m["host_spill_bytes"] > 0, "pool never spilled to host tier"
+    assert m["host_prefetch_bytes"] > 0, "warm run never prefetched"
+    return dict(spill_bytes=m["host_spill_bytes"],
+                prefetch_bytes=m["host_prefetch_bytes"],
+                stall_ratio=stall_ratio, warm_ok=float(warm_ok),
+                prefetch_ops=prefetch_ops)
+
+
+def run_multitenant(params, cfg, csv=True, n_req=24):
+    """Open-loop multi-tenant trace: achieved hit-rate vs reuse ceiling."""
+    srv = _server(params, cfg, max_batch=3, pool_blocks=96)
+    reqs = gen_multitenant_trace(n_req, rate=30.0, n_tenants=N_TENANTS,
+                                 reuse_p=REUSE_P, body_avg=8,
+                                 output_len=4, seed=2)
+    arrivals, reused = multitenant_arrivals(
+        reqs, cfg.vocab_size, n_tenants=N_TENANTS, prefix_len=24,
+        seed=2, time_scale=0.25, max_body=16)
+    stats = srv.run(arrivals)
+    cs = srv.cluster.prefix_cache.stats
+    hit_rate = cs.hits / max(1, cs.lookups)
+    reuse_ceiling = sum(reused) / max(1, len(reused))
+    m = srv.metrics
+    if csv:
+        print("multitenant_metric,value")
+        print(f"n_requests,{stats['n_requests']:.0f}")
+        print(f"finished,{stats['finished']:.0f}")
+        print(f"lookups,{cs.lookups}")
+        print(f"hits,{cs.hits}")
+        print(f"hit_rate,{hit_rate:.3f}")
+        print(f"reuse_ceiling,{reuse_ceiling:.3f}")
+        print(f"cache_hit_tokens,{m['cache_hit_tokens']:.0f}")
+        print(f"throughput_tok_s,{stats['throughput_tok_s']:.1f}")
+    return dict(hit_rate=hit_rate, reuse_ceiling=reuse_ceiling,
+                finished=stats["finished"], n=stats["n_requests"],
+                hit_tokens=m["cache_hit_tokens"],
+                tput=stats["throughput_tok_s"])
+
+
+def main():
+    t0 = time.perf_counter()
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    wc = run_warm_cold(params, cfg)
+    ho = run_host_overlap(params, cfg)
+    mt = run_multitenant(params, cfg)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"bench_prefix_cache,{us:.1f},"
+          f"warm_cold={wc['ratio']:.2f}x,"
+          f"stall_ratio={ho['stall_ratio']:.3f},"
+          f"hit_rate={mt['hit_rate']:.2f}")
+    write_bench_json(
+        "prefix_cache",
+        rows=[["warm_cold", wc["ttft_cold"], wc["ttft_warm"],
+               wc["ratio"], wc["hit_tokens"]],
+              ["host_overlap", ho["spill_bytes"], ho["prefetch_bytes"],
+               ho["stall_ratio"], ho["warm_ok"]],
+              ["multitenant", mt["n"], mt["finished"], mt["hit_rate"],
+               mt["hit_tokens"]]],
+        config={"model": "olmo-1b-smoke", "prefix_len": PREFIX_LEN,
+                "n_warm": N_WARM, "n_tenants": N_TENANTS,
+                "reuse_p": REUSE_P},
+        header=["section", "a", "b", "c", "d"],
+        metrics={
+            # All gated metrics are higher-is-better.
+            "ttft_warm_cold_ratio": wc["ratio"],
+            "token_identity": wc["token_identity"] * ho["warm_ok"],
+            "prefetch_overlap": 1.0 - ho["stall_ratio"],
+            # Hard gate on the <= 0.1 stall-ratio acceptance bound.
+            "prefetch_overlap_ok": float(ho["stall_ratio"] <= 0.1),
+            "hit_rate": mt["hit_rate"],
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,9 @@ class HardwareSpec:
     ici_link_bw: float = 50e9             # bytes/s per link
     dcn_bw: float = 25e9                  # bytes/s per host, pod-to-pod
     vmem_bytes: float = 128e6             # ~128 MB VMEM per chip
+    # Device <-> host-DRAM transfer bandwidth (PCIe-class): what a KV
+    # block pays to spill to or prefetch from the host tier.
+    host_link_bw: float = 32e9            # bytes/s per chip
 
     @property
     def critical_intensity(self) -> float:

@@ -49,8 +49,10 @@ from repro.configs.base import ModelConfig
 from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
+from repro.serving.hosttier import HostKVTier
 from repro.serving.kvpool import rows_for_token_range
 from repro.serving.perfmodel import InstancePerfModel
+from repro.serving.prefixcache import RadixPrefixCache
 from repro.serving.protocol import MoveKVCache, MoveLeg, MoveResult
 from repro.serving.request import Request, RequestState
 from repro.serving.staging import AsyncStager
@@ -171,6 +173,19 @@ class Cluster:
         for eng in self.engines.values():
             eng.prefix_sink = self._make_prefix_sink(eng.inst_id)
             eng.peers = self.engines      # shared: add_instance updates all
+        # Host-DRAM tier + cross-request prefix cache (both opt-in).
+        self.host_tier: Optional[HostKVTier] = None
+        self.prefix_cache: Optional[RadixPrefixCache] = None
+        if config.host_tier_blocks > 0:
+            self.host_tier = HostKVTier(
+                config.host_tier_blocks,
+                high_watermark=config.host_high_watermark,
+                low_watermark=config.host_low_watermark)
+        if config.prefix_cache:
+            self.prefix_cache = RadixPrefixCache(self,
+                                                 host_tier=self.host_tier)
+            for eng in self.engines.values():
+                self._wire_cache(eng)
         perf = perf if perf is not None else InstancePerfModel(cfg)
         self.gmanager = GManager(perf, config.block_size,
                                  heartbeat_timeout=config.heartbeat_timeout,
@@ -234,17 +249,33 @@ class Cluster:
                     eng.drop_hosted(req_id)
         return True
 
+    def _wire_cache(self, eng: InstanceEngine) -> None:
+        """Install the prefix cache's hooks on one engine: the engine's
+        admission walks/inserts it, and the rManager treats unpinned
+        replicas as reclaimable capacity (evicting on demand)."""
+        cache = self.prefix_cache
+        eng.prefix_cache = cache
+        inst = eng.inst_id
+        eng.rmanager.evict_hook = \
+            lambda n, _i=inst: cache.evict_device(_i, n)
+        eng.rmanager.cache_blocks_fn = \
+            lambda _i=inst: cache.evictable(_i)
+
     # --- movement ------------------------------------------------------ #
     def _make_prefix_sink(self, src_id: int):
         """Reserve-then-stream prefix sink for streaming paged prefill.
 
-        ``sink(req, n_tokens)`` commits whole blocks covering the
-        block-aligned prefix [0, n_tokens) across one or more creditors
-        (striping when no single creditor can hold it) and returns the
-        ``PrefixSink`` the owner's chunk loop writes through — or None
-        when the cluster is out of pooled memory, with every partial
-        reservation rolled back and zero compute spent."""
-        def sink(req: Request, n_tokens: int) -> Optional[PrefixSink]:
+        ``sink(req, n_tokens, start=0)`` commits whole blocks covering
+        the block-aligned GLOBAL token range [start, start + n_tokens)
+        across one or more creditors (striping when no single creditor
+        can hold it; ``start`` > 0 when a cached prefix already covers
+        the head of the prompt) and returns the ``PrefixSink`` the
+        owner's chunk loop writes through — or None when the cluster is
+        out of pooled memory, with every partial reservation rolled
+        back and zero compute spent. Creditors count their unpinned
+        prefix-cache replicas as capacity (try_move evicts on demand)."""
+        def sink(req: Request, n_tokens: int,
+                 start: int = 0) -> Optional[PrefixSink]:
             bs = self.block_size
             spans: List[Tuple[int, int, List[int]]] = []
 
@@ -259,7 +290,7 @@ class Cluster:
                     rollback()
                     return None
                 eng = self.engines[dst]
-                nb = min(eng.rmanager.pool.alloc.free_count,
+                nb = min(eng.rmanager.effective_free,
                          (n_tokens - off) // bs)
                 if nb <= 0 or not eng.rmanager.try_move_kvcache(req.req_id,
                                                                 nb):
@@ -267,7 +298,7 @@ class Cluster:
                     return None
                 blocks = eng.rmanager.commit_move_in(req.req_id, nb,
                                                      at_front=False)
-                spans.append((dst, off, blocks))
+                spans.append((dst, start + off, blocks))
                 off += nb * bs
             return PrefixSink(self, req.req_id, spans)
         return sink
@@ -391,7 +422,7 @@ class Cluster:
         for i, e in self.engines.items():
             if i == exclude or i in self._dead:
                 continue
-            free = e.rmanager.pool.alloc.free_count
+            free = e.rmanager.effective_free
             if free > best_free:
                 best, best_free = i, free
         return best
@@ -418,6 +449,10 @@ class Cluster:
                 for i, e in self.engines.items():
                     if i not in self._dead:
                         e.drop_hosted(req.req_id)
+                if self.prefix_cache is not None:
+                    # The dead engine can't unpin its cached prefix;
+                    # release here so the re-submit can re-acquire.
+                    self.prefix_cache.release(req.req_id)
                 self.submit(req)
             # 2) Requests with REMOTE spans hosted on the dead instance:
             #    the lost span must be recomputed -> full re-prefill.
@@ -432,6 +467,8 @@ class Cluster:
                         e.slots[req.slot] = None
                         req.slot = None
                         e.rmanager.release_request(req.req_id)
+                        if self.prefix_cache is not None:
+                            self.prefix_cache.release(req.req_id)
                         e.remote_insts.pop(req.req_id, None)
                         # Reclaim surviving creditor-hosted spans too.
                         for j, ej in self.engines.items():
@@ -452,6 +489,8 @@ class Cluster:
             prefill_chunk=ref.prefill_chunk)
         self.engines[new_id].prefix_sink = self._make_prefix_sink(new_id)
         self.engines[new_id].peers = self.engines
+        if self.prefix_cache is not None:
+            self._wire_cache(self.engines[new_id])
         self._need_full_hb.add(new_id)
         return new_id
 
@@ -497,6 +536,10 @@ class Cluster:
             if i in self._dead:
                 continue
             made += eng.step()
+        if self.host_tier is not None:
+            # Finalize whichever D2H spills have landed — behind the
+            # decode compute just dispatched, never blocking on it.
+            self.host_tier.drain(block=False)
         # Free creditor-hosted blocks of requests that finished since the
         # last step (metadata only). Engines report each finish once.
         for i, eng in self.engines.items():

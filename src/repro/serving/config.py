@@ -40,6 +40,13 @@ class ServingConfig:
     # --- KV movement -------------------------------------------------- #
     move_chunk_tokens: int = 16    # reactive spill granularity
     async_movement: bool = True    # overlap pool-row copies with compute
+    # --- prefix cache / host-DRAM tier -------------------------------- #
+    prefix_cache: bool = False     # cross-request radix prefix caching
+    host_tier_blocks: int = 0      # host-DRAM KV frames (0 = no tier;
+    #                                requires prefix_cache — the cache
+    #                                is the index into the tier)
+    host_high_watermark: float = 0.9   # tier occupancy that triggers LRU
+    host_low_watermark: float = 0.7    # ...eviction down to this level
     # --- gManager / Algorithm 1 --------------------------------------- #
     schedule_every: int = 4        # cluster steps between plan rounds
     heartbeat_timeout: float = 3.0
@@ -59,6 +66,13 @@ class ServingConfig:
                 f"{self.admission_policy!r}")
         if self.max_local_len < 2 * self.block_size:
             raise ValueError("max_local_len must cover >= 2 blocks")
+        if self.host_tier_blocks > 0 and not self.prefix_cache:
+            raise ValueError("host_tier_blocks requires prefix_cache=True"
+                             " (the radix cache is the tier's index)")
+        if not 0.0 < self.host_low_watermark <= self.host_high_watermark \
+                <= 1.0:
+            raise ValueError("need 0 < host_low_watermark <= "
+                             "host_high_watermark <= 1")
 
     @property
     def beta_threshold(self) -> int:

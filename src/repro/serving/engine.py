@@ -53,7 +53,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +90,13 @@ class CommStats:
     # [L, 1, T, K, hd] cache. (Per-layer attention workspace — scores,
     # prefix reads — is common to both paths and not counted.)
     admit_stage_bytes: int = 0
+    # Host-tier traffic through this instance's pool: blocks spilled
+    # D2H by prefix-cache eviction / prefetched H2D on a host-tier hit.
+    host_spill_bytes: int = 0
+    host_prefetch_bytes: int = 0
+    # Prompt tokens admission covered from the prefix cache instead of
+    # prefilling (the FLOPs the cache saved this instance).
+    cache_hit_tokens: int = 0
 
 
 def buffer_ptr(x) -> Optional[int]:
@@ -190,9 +197,15 @@ class InstanceEngine:
         self.peers: Dict[int, "InstanceEngine"] = {}
         # Cluster-installed callback: commit creditor blocks for an
         # overflowing prompt prefix BEFORE any prefill compute.
-        # sink(req, n_tokens) -> PrefixSink handle | None (cluster OOM);
-        # the chunk loop streams KV rows in through handle.write().
+        # sink(req, n_tokens, start=0) -> PrefixSink handle | None
+        # (cluster OOM); ``start`` is the global token the creditor
+        # region begins at (after any cached prefix); the chunk loop
+        # streams KV rows in through handle.write().
         self.prefix_sink: Optional[Callable] = None
+        # Cluster-installed cross-request prefix cache (None = disabled).
+        # Admission walks it for the longest cached prefix; _finish
+        # inserts the request's chain back.
+        self.prefix_cache = None
 
     # ----------------------------------------------------------------- #
     def submit(self, req: Request) -> None:
@@ -235,7 +248,12 @@ class InstanceEngine:
         n_over = 0 if T <= cap else -(-(T - cap) // bs) * bs
         n_local = T - n_over
         need_blocks = -(-n_local // bs)
-        if self.rmanager.pool.alloc.free_count < need_blocks:
+        # A cached prefix needs no fresh frames, and unpinned cache
+        # replicas are reclaimable on demand — count both as headroom
+        # (the actual eviction happens lazily in _admit_streaming).
+        evictable = (self.prefix_cache.evictable(self.inst_id)
+                     if self.prefix_cache is not None else 0)
+        if self.rmanager.pool.alloc.free_count + evictable < need_blocks:
             return False
         if n_over and (not self._can_pool or self.prefix_sink is None):
             req.state = RequestState.FAILED      # cannot span: no KV pool
@@ -282,34 +300,128 @@ class InstanceEngine:
         self.rmanager.pool.append_tokens(req.req_id, n_local)
         return logits
 
+    def _ensure_free(self, n_blocks: int) -> bool:
+        """Make ``n_blocks`` frames allocatable, evicting unpinned
+        prefix-cache replicas on demand (they spill to the host tier
+        when one is configured)."""
+        alloc = self.rmanager.pool.alloc
+        if alloc.free_count >= n_blocks:
+            return True
+        if self.prefix_cache is not None:
+            self.prefix_cache.evict_device(
+                self.inst_id, n_blocks - alloc.free_count)
+        return alloc.free_count >= n_blocks
+
+    def _copy_block_rows(self, src_blk: int, dst_blk: int,
+                         n_rows: int) -> None:
+        """Copy the first ``n_rows`` token rows of one pool block into
+        another (the copy-on-write tail split). Dispatch only — the
+        functional dependencies order it against later pool updates."""
+        blk = np.full(n_rows, dst_blk, np.int32)
+        off = np.arange(n_rows, dtype=np.int32)
+        k = read_pool_rows(self.pool_k, [src_blk],
+                           self.block_size)[:, :n_rows]
+        v = read_pool_rows(self.pool_v, [src_blk],
+                           self.block_size)[:, :n_rows]
+        self.pool_k = scatter_pool_rows(self.pool_k, blk, off, k)
+        self.pool_v = scatter_pool_rows(self.pool_v, blk, off, v)
+
+    def _admit_cached_prefix(self, req: Request,
+                             n_local: int) -> Tuple[int, int]:
+        """Walk the prefix cache and attach the longest cached prefix to
+        the request's local chain. Returns ``(n_cached, write_from)``:
+        the global token count admission may skip prefilling, and the
+        first global token index the stream may WRITE pool rows for.
+
+        Shared full blocks are attached by reference (one allocator ref
+        each). A FULL-prompt hit takes the copy-on-write path: the first
+        m-1 blocks are shared and the last is COPIED WHOLE into a
+        private frame, so decode appends land in request-private frames
+        — a shared frame is never mutated. The final prompt token is
+        still re-run through one prefill chunk (its logits sample the
+        first output token) but with its pool write SUPPRESSED
+        (``write_from = T``): its cached KV row — written at the
+        original chunk alignment — stays byte-identical, so a warm
+        request's decode attends over exactly the bytes a cold run
+        would have produced."""
+        cache, pool, bs = self.prefix_cache, self.rmanager.pool, \
+            self.block_size
+        rid, T = req.req_id, len(req.prompt)
+        shared = cache.acquire(self.inst_id, rid, req.prompt,
+                               max_blocks=n_local // bs)
+        if not shared:
+            return 0, 0
+        m = len(shared)
+        if m * bs == T:
+            pool.attach_shared(rid, shared[:m - 1], bs)
+            n_cached = T - 1
+            cow_src = shared[m - 1]
+        else:
+            pool.attach_shared(rid, shared, bs)
+            n_cached = m * bs
+            cow_src = None
+        tail_blocks = -(-(n_local - (len(shared) - (1 if cow_src
+                                                    is not None else 0))
+                          * bs) // bs)
+        if not self._ensure_free(tail_blocks) or \
+                not pool.append_tokens(rid, n_local - pool.tokens_of(rid)):
+            pool.release(rid)
+            cache.release(rid)
+            return 0, 0
+        if cow_src is not None:
+            cow = pool.requests[rid].blocks[-1]
+            self._copy_block_rows(cow_src, cow, bs)
+            cache.stats.cow_copies += 1
+        self.stats.cache_hit_tokens += n_cached
+        return n_cached, (T if cow_src is not None else 0)
+
     def _admit_streaming(self, req: Request, n_over: int,
                          n_local: int):
         """Dense/moe admission: reserve every block, then stream chunks.
 
-        All placement decisions happen BEFORE any compute: creditor
-        blocks for the overflow prefix are committed via the
+        All placement decisions happen BEFORE any compute: the longest
+        cached prefix is pinned from the prefix cache (when enabled),
+        creditor blocks for the overflow prefix are committed via the
         reserve-then-stream ``prefix_sink`` and the local tail's blocks
         are allocated here, so a failed admission costs zero FLOPs.
         Returns the final chunk's logits, None on cluster-wide OOM, or
         the ``_CANCELLED`` sentinel when the request was cancelled
-        mid-stream — in that case every reservation (local blocks AND
-        committed creditor spans) is rolled back here, allocator state
-        restored exactly.
+        mid-stream — in that case every reservation (local blocks,
+        committed creditor spans AND cache pins) is rolled back,
+        allocator state restored exactly.
         """
         rid = req.req_id
         req.state = RequestState.PREFILLING
+        cache = self.prefix_cache
+        n_cached, write_from = 0, 0
+        if cache is not None:
+            n_cached, write_from = self._admit_cached_prefix(req, n_local)
         sink = None
         if n_over:
-            sink = self.prefix_sink(req, n_over)
+            sink = self.prefix_sink(req, n_over, start=n_cached)
             if sink is None:
+                self.rmanager.release_request(rid)
+                if cache is not None:
+                    cache.release(rid)
                 return None
-        ok = self.rmanager.pool.append_tokens(rid, n_local)
-        assert ok, "free_count was checked before the pop"
-        logits = self._stream_prefill(req, n_over, n_local, sink)
+        if not n_cached:
+            # Cold path: the cached branch already appended its tail.
+            if not self._ensure_free(-(-n_local // self.block_size)) or \
+                    not self.rmanager.pool.append_tokens(rid, n_local):
+                if sink is not None:
+                    sink.abort()
+                self.rmanager.release_request(rid)
+                if cache is not None:
+                    cache.release(rid)
+                return None
+        logits = self._stream_prefill(req, n_over, n_local, sink,
+                                      n_cached=n_cached,
+                                      write_from=write_from)
         if logits is _CANCELLED:
             # Abort the in-flight admission: drain staged creditor
             # writes, drop the committed spans (metadata release — the
             # all-or-nothing machinery's rollback), free local blocks.
+            # Cache pins are released in _release_slot, exactly once.
             if sink is not None:
                 sink.abort()
             self.rmanager.release_request(rid)
@@ -323,13 +435,24 @@ class InstanceEngine:
         return logits
 
     def _stream_prefill(self, req: Request, n_over: int, n_local: int,
-                        sink) -> jax.Array:
+                        sink, n_cached: int = 0,
+                        write_from: int = 0) -> jax.Array:
         """Drive ``prefill_chunk_paged`` over the prompt, O(chunk) peak.
 
         Per chunk: local rows scatter into the pool inside the jitted
         step; creditor-bound rows come back as the chunk KV export and
         stream out through ``sink.write`` — the only transient arrays
         are chunk-sized, never [T]-sized.
+
+        With a cached prefix the stream starts at ``n_cached``: global
+        tokens [0, n_cached) are already resident in the local chain's
+        leading (shared) blocks, the creditor region shifts to
+        [n_cached, n_cached + n_over), and the local tail holds
+        [n_cached + n_over, T) — chain index of global token t stays
+        ``t - n_over`` because the chain is cached blocks then tail in
+        global token order. Cross-region contiguity is not required:
+        pool rows carry position-encoded KV, so attention over the
+        union of the covered tables is exact.
         """
         rid = req.req_id
         T = len(req.prompt)
@@ -340,8 +463,9 @@ class InstanceEngine:
         cred_ids = list(sink.rank_ids) if sink is not None else []
         rank_pools = [pool] + [self.peers[d].rmanager.pool
                                for d in cred_ids]
+        cred_end = n_cached + n_over     # first locally-written token
         logits = None
-        for t0 in range(0, T, C):
+        for t0 in range(n_cached, T, C):
             if req.cancelled:
                 # Cooperative abort point: between chunks, before any
                 # more compute or creditor writes are dispatched.
@@ -354,16 +478,20 @@ class InstanceEngine:
             # padded rows carry block id NB (out of range => dropped).
             wblk = np.full(C, NB, np.int32)
             woff = np.zeros(C, np.int32)
-            lo = max(t0, n_over)
+            # ``write_from`` suppresses pool writes for re-run tokens
+            # whose KV is already resident (the COW full-hit's final
+            # prompt token: computed for logits only, never re-written).
+            lo = max(t0, cred_end, write_from)
             if lo < t1:
                 blk, off = rows_for_token_range(local_blocks, bs,
                                                 lo - n_over, t1 - n_over)
                 wblk[lo - t0:t1 - t0] = blk
                 woff[lo - t0:t1 - t0] = off
-            # Tables address exactly the already-written tokens [0, t0).
-            covered = [min(max(t0 - n_over, 0), n_local)]
+            # Tables address exactly the already-resident tokens [0, t0):
+            # the cached prefix plus whatever this stream has written.
+            covered = [min(n_cached + max(t0 - cred_end, 0), n_local)]
             if sink is not None:
-                cov = sink.coverage(min(t0, n_over))
+                cov = sink.coverage(min(t0, cred_end))
                 covered += [cov[d] for d in cred_ids]
             needed = max(1, max(-(-c // bs) for c in covered))
             tables, tails = prefix_tables(rank_pools, rid, covered,
@@ -377,8 +505,8 @@ class InstanceEngine:
                     self.params, self.cfg, toks, t0, n_valid,
                     self.pool_k, self.pool_v, tables, tails, wblk, woff,
                     remote_pools=remote)
-            if sink is not None and t0 < n_over:
-                hi = min(t1, n_over)
+            if sink is not None and t0 < cred_end:
+                hi = min(t1, cred_end)
                 sink.write(t0, k_c[:, :hi - t0], v_c[:, :hi - t0])
             self.stats.admit_stage_bytes = max(
                 self.stats.admit_stage_bytes,
@@ -416,7 +544,31 @@ class InstanceEngine:
     def _finish(self, req: Request) -> None:
         req.state = RequestState.FINISHED
         req.finish_time = time.monotonic()
+        self._cache_insert(req)
         self._release_slot(req)
+
+    def _cache_insert(self, req: Request) -> None:
+        """Adopt a finished request's full local blocks into the prefix
+        cache BEFORE the chain is released — the cache's incref keeps
+        each adopted frame alive through the release's decref, so a
+        finished request's prefix spills/caches instead of dropping.
+        Creditor-spanning requests are skipped: their local chain is not
+        the global token chain (a known coverage gap — the creditor
+        spans would need gathering first)."""
+        cache = self.prefix_cache
+        if cache is None or not self._can_pool or req.cancelled:
+            return
+        if self.remote_insts.get(req.req_id):
+            return
+        rb = self.rmanager.pool.requests.get(req.req_id)
+        if rb is None or not rb.blocks:
+            return
+        # KV exists for the prompt plus every DECODED INPUT token — the
+        # last sampled token was never fed back, so its KV was never
+        # written.
+        tokens = list(req.prompt) + list(req.output[:-1])
+        tokens = tokens[:rb.n_tokens(self.block_size)]
+        cache.insert_chain(self.inst_id, tokens, rb.blocks)
 
     def _fail(self, req: Request) -> None:
         req.state = RequestState.FAILED
@@ -456,6 +608,10 @@ class InstanceEngine:
             self.slots[req.slot] = None
             req.slot = None
         self.rmanager.release_request(req.req_id)
+        if self.prefix_cache is not None:
+            # Unpin the request's cached-prefix nodes — exactly once
+            # (the pin list is popped), on every terminal path.
+            self.prefix_cache.release(req.req_id)
         self.remote_insts.pop(req.req_id, None)
         self._finished_events.append(req.req_id)
 
@@ -476,6 +632,11 @@ class InstanceEngine:
         # never corrupt (paper: reject when pool exhausted).
         for r in list(self.slots):
             if r is not None and not pool.append_tokens(r.req_id, 1):
+                # Unpinned prefix-cache replicas are reclaimable: evict
+                # one and retry before rejecting the request.
+                if self._ensure_free(1) and pool.append_tokens(r.req_id,
+                                                               1):
+                    continue
                 self._fail(r)
         running = self.running
         if not running:
@@ -585,6 +746,23 @@ class InstanceEngine:
         k = read_pool_rows(self.pool_k, blocks, self.block_size)
         v = read_pool_rows(self.pool_v, blocks, self.block_size)
         return k[:, None], v[:, None]        # [L, 1, n*bs, K, hd]
+
+    # --- prefix-cache block transport ----------------------------------#
+    def read_block_rows(self, block: int):
+        """One pool block's rows as independent [L, bs, K, hd] arrays
+        (a gather — safe to keep after the frame is freed and reused;
+        the functional dependencies order it before any overwrite)."""
+        k = read_pool_rows(self.pool_k, [block], self.block_size)
+        v = read_pool_rows(self.pool_v, [block], self.block_size)
+        return k, v
+
+    def write_block_rows(self, block: int, k, v) -> None:
+        """Fill one pool block from [L, bs, K, hd] rows (host or device
+        arrays — an H2D prefetch upload or a D2D peer replica copy)."""
+        self.pool_k = write_pool_rows(self.pool_k, [block],
+                                      jnp.asarray(k), self.block_size)
+        self.pool_v = write_pool_rows(self.pool_v, [block],
+                                      jnp.asarray(v), self.block_size)
 
     # --- creditor side -------------------------------------------------#
     def host_kv(self, req_id: int, blocks: List[int], k, v) -> None:

@@ -36,6 +36,7 @@ class _InstanceStatus:
     batch_size: int = 0
     mem_blocks_total: int = 0
     mem_blocks_used: int = 0
+    cache_blocks: int = 0          # unpinned (reclaimable) cache replicas
     alive: bool = True
     # req_id -> entry (this instance's slice of the request)
     entries: Dict[int, RequestPlacementEntry] = field(default_factory=dict)
@@ -83,6 +84,7 @@ class GManager:
         st.batch_size = hb.batch_size
         st.mem_blocks_total = hb.mem_blocks_total
         st.mem_blocks_used = hb.mem_blocks_used
+        st.cache_blocks = hb.cache_blocks
         st.alive = True
         return True
 
@@ -144,7 +146,7 @@ class GManager:
                 mem_blocks_used=st.mem_blocks_used,
                 requests=reqs, offloaded_tokens=off,
                 hosted_tokens=hosted, alive=st.alive,
-                req_spans=req_spans))
+                req_spans=req_spans, cache_blocks=st.cache_blocks))
         return views
 
     def plan_moves(self, urgency: Optional[Dict[int, float]] = None

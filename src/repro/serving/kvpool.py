@@ -26,13 +26,25 @@ import numpy as np
 
 
 class BlockAllocator:
-    """Fixed-capacity block allocator for one rank's pool."""
+    """Fixed-capacity, REFCOUNTED block allocator for one rank's pool.
+
+    Since the cross-request prefix cache, one block frame can be
+    referenced by several holders at once — the radix cache (one ref per
+    device replica) plus every live request whose chain shares the
+    frame. ``alloc`` hands a frame out with refcount 1; ``incref`` adds
+    a holder; ``free`` drops one reference per call and only returns the
+    frame to the free list when the count reaches zero. Every holder
+    therefore keeps its exact single-release discipline (the double-free
+    guard still raises on a frame with no live references) while shared
+    prefixes never copy.
+    """
 
     def __init__(self, num_blocks: int, block_size: int):
         self.num_blocks = num_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
-        self._owner: Dict[int, int] = {}          # block -> req_id
+        self._owner: Dict[int, int] = {}          # block -> allocating id
+        self._ref: Dict[int, int] = {}            # block -> live references
         self.reserved = 0                         # try_move reservations
 
     @property
@@ -49,6 +61,7 @@ class BlockAllocator:
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._owner[b] = req_id
+            self._ref[b] = 1
         return blocks
 
     def reserve(self, n: int) -> bool:
@@ -68,11 +81,34 @@ class BlockAllocator:
     def cancel_reservation(self, n: int) -> None:
         self.reserved = max(0, self.reserved - n)
 
-    def free(self, blocks: Sequence[int]) -> None:
+    def incref(self, blocks: Sequence[int]) -> None:
+        """Add one reference per block (prefix-cache sharing)."""
         for b in blocks:
-            owner = self._owner.pop(b, None)
-            if owner is None:
+            if b not in self._ref:
+                raise KeyError(f"incref of unallocated block {b}")
+            self._ref[b] += 1
+
+    def refcount(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def rebind(self, block: int, new_id: int) -> None:
+        """Reassign a block's informational owner id (cache adoption)."""
+        if block in self._owner:
+            self._owner[block] = new_id
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Drop ONE reference per block; frames return to the free list
+        only at refcount zero. Freeing a frame with no live references
+        raises (the double-free guard)."""
+        for b in blocks:
+            refs = self._ref.get(b)
+            if refs is None:
                 raise KeyError(f"double free of block {b}")
+            if refs > 1:
+                self._ref[b] = refs - 1
+                continue
+            del self._ref[b]
+            self._owner.pop(b, None)
             self._free.append(b)
 
     def blocks_of(self, req_id: int) -> List[int]:
@@ -148,6 +184,18 @@ class RankKVPool:
             rb.blocks.extend(blocks)
             rb.tail_tokens = self.block_size
         return blocks
+
+    def attach_shared(self, req_id: int, blocks: Sequence[int],
+                      tail_tokens: int) -> None:
+        """Start a request's chain from already-resident shared blocks
+        (prefix-cache hit). Each block gains one reference, so the
+        request's normal ``release`` decrefs it without disturbing the
+        cache pin or other sharers."""
+        rb = self.requests.setdefault(req_id, RequestBlocks(req_id))
+        assert not rb.blocks, "attach_shared on a non-empty chain"
+        self.alloc.incref(blocks)
+        rb.blocks = list(blocks)
+        rb.tail_tokens = tail_tokens
 
     def release(self, req_id: int) -> None:
         rb = self.requests.pop(req_id, None)

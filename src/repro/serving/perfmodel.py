@@ -123,6 +123,17 @@ class InstancePerfModel:
         b = span_entries * self.merge_bytes_per_span_layer()
         return b / self.hw.ici_link_bw + span_entries * self.alpha_hop
 
+    # --- host-tier (DRAM) transfer time -------------------------------- #
+    def t_host_transfer(self, n_tokens: int) -> float:
+        """Time for ``n_tokens`` of KV to cross the device<->host link —
+        a spill (D2H) or prefetch (H2D) of that many cached tokens. The
+        runtime overlaps these with decode; the scheduler still charges
+        them un-overlapped as the conservative spill penalty when a plan
+        displaces cached blocks (mirrors ``_reclaim_pays``)."""
+        kv_bytes = n_tokens * self.kv_bytes_per_token_layer() \
+            * self.cfg.num_layers
+        return kv_bytes / (self.hw.host_link_bw * self.chips)
+
     # --- Eq. 7: instance / cluster throughput ------------------------- #
     def tps(self, beta: int, lengths: Sequence[int],
             offloaded_tokens: int = 0, hosted_tokens: int = 0,

@@ -31,6 +31,10 @@ class Heartbeat:
     mem_blocks_total: int = 0
     mem_blocks_used: int = 0
     removed_req_ids: List[int] = field(default_factory=list)
+    # Unpinned prefix-cache replicas: used blocks the instance can
+    # reclaim on demand (evict/spill). Algorithm 1 counts them as
+    # creditor capacity — minus a spill-cost penalty.
+    cache_blocks: int = 0
 
 
 @dataclass(frozen=True)

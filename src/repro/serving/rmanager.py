@@ -9,7 +9,7 @@ a reservation that never commits is just cancelled numbers.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.serving.kvpool import RankKVPool
 from repro.serving.protocol import Heartbeat, RequestPlacementEntry
@@ -24,6 +24,21 @@ class RManager:
         self._last_reported: Dict[int, RequestPlacementEntry] = {}
         self._owned: Set[int] = set()       # req_ids this instance owns
         self.batch_size = 0
+        # Prefix-cache hooks (cluster-installed when caching is on):
+        # evict_hook(n) frees up to n unpinned cached frames on demand;
+        # cache_blocks_fn() reports how many such frames exist — the
+        # heartbeat carries it so Algorithm 1 treats cached-but-unpinned
+        # memory as reclaimable creditor capacity.
+        self.evict_hook: Optional[Callable[[int], int]] = None
+        self.cache_blocks_fn: Optional[Callable[[], int]] = None
+
+    @property
+    def effective_free(self) -> int:
+        """Allocatable blocks counting evictable cache replicas."""
+        free = self.pool.alloc.free_count
+        if self.cache_blocks_fn is not None:
+            free += self.cache_blocks_fn()
+        return free
 
     # --- placement metadata ------------------------------------------- #
     def set_owner(self, req_id: int, owned: bool = True) -> None:
@@ -56,12 +71,21 @@ class RManager:
             batch_size=self.batch_size,
             mem_blocks_total=self.pool.alloc.num_blocks,
             mem_blocks_used=self.pool.alloc.used_count,
-            removed_req_ids=removed)
+            removed_req_ids=removed,
+            cache_blocks=(self.cache_blocks_fn()
+                          if self.cache_blocks_fn is not None else 0))
 
     # --- try_move_kvcache: FCFS reservation on the DESTINATION --------- #
     def try_move_kvcache(self, req_id: int, num_blocks: int) -> bool:
-        """Called by a SOURCE instance before shipping KV here."""
-        return self.pool.alloc.reserve(num_blocks)
+        """Called by a SOURCE instance before shipping KV here. When the
+        pool is short, unpinned prefix-cache replicas are evicted on
+        demand (spilling to the host tier) before refusing."""
+        if self.pool.alloc.reserve(num_blocks):
+            return True
+        if self.evict_hook is not None:
+            self.evict_hook(num_blocks - self.pool.alloc.free_count)
+            return self.pool.alloc.reserve(num_blocks)
+        return False
 
     def commit_move_in(self, req_id: int, num_blocks: int,
                        at_front: bool = True) -> Optional[List[int]]:

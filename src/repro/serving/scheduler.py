@@ -60,6 +60,11 @@ class InstanceView:
     offloaded_tokens: int = 0          # owner's KV held remotely
     hosted_tokens: int = 0             # others' KV held here
     alive: bool = True
+    # Unpinned prefix-cache replicas: blocks that count in
+    # mem_blocks_used but are reclaimable on demand (evicted/spilled to
+    # the host tier). Algorithm 1 treats them as creditor capacity,
+    # charged a spill-cost penalty when a plan would displace them.
+    cache_blocks: int = 0
     # Owned requests' creditor spans: req_id -> {creditor_inst: blocks}.
     # Populated by GManager._views from the cross-instance placement map;
     # drives the per-span merge-cost and parallel-slice terms.
@@ -152,7 +157,12 @@ class GreedyScheduler:
 
     def _apply_leg(self, d: InstanceView, c: InstanceView, rid: int,
                    k_blocks: int) -> None:
-        """Mutate working views as if k blocks of rid moved d -> c."""
+        """Mutate working views as if k blocks of rid moved d -> c.
+
+        Blocks beyond the creditor's plain free pool displace unpinned
+        prefix-cache replicas (the runtime evicts/spills them on
+        demand): those frames change hands rather than growing
+        ``mem_blocks_used``."""
         tok = k_blocks * self.bs
         d.offloaded_tokens += tok
         d.mem_blocks_used -= k_blocks
@@ -160,15 +170,24 @@ class GreedyScheduler:
         d.requests[rid] = (ln, blk - k_blocks, own)
         spans = d.req_spans.setdefault(rid, {})
         spans[c.inst_id] = spans.get(c.inst_id, 0) + k_blocks
+        evicted = max(0, k_blocks - c.free_blocks)
+        c.cache_blocks = max(0, c.cache_blocks - evicted)
         c.hosted_tokens += tok
-        c.mem_blocks_used += k_blocks
+        c.mem_blocks_used += k_blocks - evicted
 
-    def _creditor_cap(self, c: InstanceView) -> int:
+    def _creditor_cap(self, c: InstanceView, *,
+                      with_cache: bool = True) -> int:
         """Blocks an offload may place on creditor ``c``: its free
         blocks MINUS one block of headroom per running request, so the
         creditor's own decode tails can keep growing until the next
-        planning round instead of hard-failing on pool exhaustion."""
-        return max(0, c.free_blocks - c.batch_size)
+        planning round instead of hard-failing on pool exhaustion.
+
+        Unpinned prefix-cache replicas (``cache_blocks``) count too —
+        the runtime evicts or spills them on demand — but placements
+        that dip into them are charged the host-link spill cost in
+        ``_striped_gain``, so displacing a warm cache must pay."""
+        extra = c.cache_blocks if with_cache else 0
+        return max(0, c.free_blocks + extra - c.batch_size)
 
     def _split_blocks(self, k: int,
                       cands: List[InstanceView]) -> List[Tuple[int, int]]:
@@ -215,7 +234,22 @@ class GreedyScheduler:
         d_new = self._debtor_tps_after(d2, d.batch_size, tok)
         after = d_new + sum(self._inst_tps(c2s.get(i, c))
                             for i, c in enumerate(cands))
-        return after - base
+        gain = after - base
+        # Spill penalty: legs that overflow a creditor's plain headroom
+        # displace unpinned cache replicas, whose frames must cross the
+        # host link (D2H) before the leg's blocks land. Charged
+        # un-overlapped and amortized over reclaim_horizon_s — the same
+        # units as ``_reclaim_pays`` — so cache-displacing placements
+        # only win when the freed-memory gain clearly beats re-warming.
+        for i, n in splits:
+            c = cands[i]
+            overflow = min(n - self._creditor_cap(c, with_cache=False),
+                           c.cache_blocks)
+            if overflow > 0:
+                t_spill = self.perf.t_host_transfer(overflow * self.bs)
+                gain -= t_spill * self._inst_tps(c) / \
+                    self.reclaim_horizon_s
+        return gain
 
     def modeled_aggregate_tps(self, views: List[InstanceView],
                               moves: List[StripedMove]) -> float:
@@ -414,7 +448,10 @@ class GreedyScheduler:
                                 (owner is not None
                                  and c.inst_id == owner.inst_id):
                             continue
-                        take = min(remaining, self._creditor_cap(c))
+                        # Reclaims stay within plain free headroom: a
+                        # relief move must not itself trash a cache.
+                        take = min(remaining,
+                                   self._creditor_cap(c, with_cache=False))
                         if take <= 0:
                             continue
                         legs.append(SpanLeg(c.inst_id, take))

@@ -261,6 +261,50 @@ class LLMServer:
     def handles(self) -> List[RequestHandle]:
         return list(self._handles.values())
 
+    @property
+    def metrics(self) -> Dict[str, float]:
+        """Cluster-wide occupancy counters: device-pool blocks (total /
+        used / free), prefix-cache footprint (device replicas, pinned by
+        live requests), host-tier occupancy, and cumulative spill /
+        prefetch / hit traffic. Cache and host-tier entries are present
+        (as zeros) even when the features are off, so dashboards keyed
+        on the names never miss."""
+        cl = self.cluster
+        total = used = free = 0
+        spill = prefetch = hit_toks = 0
+        for i, eng in cl.engines.items():
+            if i in cl._dead:
+                continue
+            alloc = eng.rmanager.pool.alloc
+            total += alloc.num_blocks
+            used += alloc.used_count
+            free += alloc.free_count
+            spill += eng.stats.host_spill_bytes
+            prefetch += eng.stats.host_prefetch_bytes
+            hit_toks += eng.stats.cache_hit_tokens
+        out: Dict[str, float] = {
+            "device_blocks_total": float(total),
+            "device_blocks_used": float(used),
+            "device_blocks_free": float(free),
+            "cache_device_blocks": 0.0,
+            "cache_pinned_blocks": 0.0,
+            "cache_hit_tokens": float(hit_toks),
+            "host_blocks_used": 0.0,
+            "host_blocks_capacity": 0.0,
+            "host_spill_bytes": float(spill),
+            "host_prefetch_bytes": float(prefetch),
+        }
+        if cl.prefix_cache is not None:
+            live = [i for i in cl.engines if i not in cl._dead]
+            out["cache_device_blocks"] = float(sum(
+                cl.prefix_cache.device_blocks(i) for i in live))
+            out["cache_pinned_blocks"] = float(sum(
+                cl.prefix_cache.pinned_blocks(i) for i in live))
+        if cl.host_tier is not None:
+            out["host_blocks_used"] = float(cl.host_tier.used_blocks)
+            out["host_blocks_capacity"] = float(cl.host_tier.capacity)
+        return out
+
     # --- open-loop event pump ------------------------------------------ #
     def run(self, arrivals: Iterable[Arrival], *,
             until: Optional[float] = None,

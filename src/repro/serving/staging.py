@@ -29,24 +29,33 @@ token-identical.
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Any, Deque
+from collections import defaultdict, deque
+from typing import Any, Deque, Dict, Optional, Tuple
 
 import jax
 
 
 class AsyncStager:
-    """Bounded in-flight window over dispatched pool-row copy chains."""
+    """Bounded in-flight window over dispatched pool-row copy chains.
+
+    Chains may carry a ``tag`` ("prefetch", "spill", ...): per-tag stall
+    counters record how often draining a tagged chain actually had to
+    WAIT — the copy was still in flight when the host needed it done.
+    ``bench_prefix_cache`` gates prefetch stalls per decode step with
+    these.
+    """
 
     def __init__(self, overlap: bool = True, depth: int = 2):
         self.overlap = overlap
         self.depth = max(1, depth)
-        self._inflight: Deque[Any] = deque()
+        self._inflight: Deque[Tuple[Any, Optional[str]]] = deque()
         self.staged = 0          # copy chains handed to the stager
         self.synced = 0          # explicit block_until_ready calls
         self.sync_wait_s = 0.0   # host time spent blocked on copies
+        self.stalls: Dict[str, int] = defaultdict(int)
+        self.stall_wait_s: Dict[str, float] = defaultdict(float)
 
-    def stage(self, arrays: Any) -> None:
+    def stage(self, arrays: Any, tag: Optional[str] = None) -> None:
         """Register one dispatched copy chain (any pytree of arrays).
 
         Serial mode blocks immediately; overlap mode admits it into the
@@ -55,25 +64,31 @@ class AsyncStager:
         """
         self.staged += 1
         if not self.overlap:
-            self._block(arrays)
+            self._block(arrays, tag)
             return
-        self._inflight.append(arrays)
+        self._inflight.append((arrays, tag))
         while len(self._inflight) > self.depth:
-            self._block(self._inflight.popleft())
+            self._block(*self._inflight.popleft())
 
     def commit(self) -> None:
         """Barrier at a table-commit point: drain every in-flight chain."""
         while self._inflight:
-            self._block(self._inflight.popleft())
+            self._block(*self._inflight.popleft())
 
-    def _block(self, arrays: Any) -> None:
+    def _block(self, arrays: Any, tag: Optional[str] = None) -> None:
         # A staged handle may since have been DONATED into a successor
         # update (the zero-copy chain); its buffer lives on inside the
         # successor, which is itself staged — so deleted handles are
         # simply skipped rather than waited on.
         live = [x for x in jax.tree.leaves(arrays)
                 if not (hasattr(x, "is_deleted") and x.is_deleted())]
+        stalled = any(not x.is_ready() for x in live
+                      if hasattr(x, "is_ready"))
         t0 = time.perf_counter()
         jax.block_until_ready(live)
-        self.sync_wait_s += time.perf_counter() - t0
+        waited = time.perf_counter() - t0
+        self.sync_wait_s += waited
         self.synced += 1
+        if stalled and tag is not None:
+            self.stalls[tag] += 1
+            self.stall_wait_s[tag] += waited

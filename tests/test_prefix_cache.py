@@ -1,0 +1,542 @@
+"""Host-DRAM KV tier + cross-request radix prefix cache (ISSUE-6).
+
+Covers the satellite checklist:
+  (a) hypothesis properties of the radix index against a jax-free stub
+      cluster: insert/match/evict never over-pin, node refcount always
+      equals the number of live request references, pinned replicas are
+      never evicted, the tree stays closed under parents, and every
+      frame returns to the allocator when the cache lets go;
+  (b) the copy-on-write tail of a full-prompt hit never aliases a
+      shared frame — shared bytes are unchanged after the warm request
+      decodes;
+  (c) token identity: cached-prefix admission (cold, warm-full,
+      warm-partial, host-prefetched) matches the dense oracle exactly
+      (float32 so paged-vs-dense rounding cannot flip argmax);
+  (d) the PR-5 exact-rollback guarantee extended to the new tiers:
+      cancel mid-streaming-prefill with pinned cache blocks restores
+      every allocator EXACTLY, unpins exactly once (the allocator's
+      double-free guard would raise otherwise) and leaves the host
+      tier untouched;
+  (e) Algorithm-1 plumbing: ``Heartbeat.cache_blocks`` reaches the
+      scheduler views, widens creditor capacity, and placements that
+      displace cached frames are charged the spill penalty.
+"""
+import collections
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serving.hosttier import HostKVTier
+from repro.serving.kvpool import BlockAllocator
+from repro.serving.prefixcache import CACHE_OWNER, RadixPrefixCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                              # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+BS = 4          # stub block size
+POOL = 24       # stub pool blocks per instance
+
+
+# ------------------------------------------------------------------ #
+# jax-free stub cluster for the index properties
+# ------------------------------------------------------------------ #
+class _StubEngine:
+    def __init__(self, num_blocks, bs):
+        self.rmanager = SimpleNamespace(
+            pool=SimpleNamespace(alloc=BlockAllocator(num_blocks, bs)))
+        self.stats = SimpleNamespace(kv_moved=0, host_spill_bytes=0,
+                                     host_prefetch_bytes=0)
+        self.frames = {}                 # blk -> (k, v) np rows
+        self.pool_k = self.pool_v = None
+
+    def read_block_rows(self, blk):
+        return self.frames.get(
+            blk, (np.zeros((2, BS), np.float32),
+                  np.zeros((2, BS), np.float32)))
+
+    def write_block_rows(self, blk, k, v):
+        self.frames[blk] = (np.array(k, copy=True), np.array(v, copy=True))
+
+
+class _StubCluster:
+    def __init__(self, n_inst=2, num_blocks=POOL, bs=BS, tier_blocks=0):
+        self.block_size = bs
+        self.engines = {i: _StubEngine(num_blocks, bs)
+                        for i in range(n_inst)}
+        self.stager = SimpleNamespace(stage=lambda arrays, tag=None: None)
+        self._dead = set()
+
+
+def _mk(n_inst=2, tier_blocks=8):
+    cl = _StubCluster(n_inst=n_inst)
+    tier = HostKVTier(tier_blocks) if tier_blocks else None
+    return cl, RadixPrefixCache(cl, host_tier=tier)
+
+
+# Chunk alphabet: few distinct blocks => chains share prefixes often.
+_CHUNKS = [(t,) * BS for t in range(4)]
+
+
+def _chain_tokens(path):
+    return [tok for chunk in path for tok in chunk]
+
+
+def _simulate_finished_request(cl, cache, inst, path, rid):
+    """A finished request's chain: alloc frames, fill KV rows, insert
+    into the cache, release the request's own references."""
+    alloc = cl.engines[inst].rmanager.pool.alloc
+    blocks = alloc.alloc(len(path), rid)
+    if blocks is None:
+        cache.evict_device(inst, len(path))
+        blocks = alloc.alloc(len(path), rid)
+        if blocks is None:
+            return False
+    for blk, chunk in zip(blocks, path):
+        row = np.full((2, BS), float(hash(chunk) % 997), np.float32)
+        cl.engines[inst].frames[blk] = (row, -row)
+    cache.insert_chain(inst, _chain_tokens(path), blocks)
+    alloc.free(blocks)
+    return True
+
+
+def _check_invariants(cl, cache):
+    # refcount == live request references, never negative.
+    refs = collections.Counter()
+    for pinned in cache._pins.values():
+        for nd in pinned:
+            refs[id(nd)] += 1
+    for nd in cache._nodes.values():
+        assert nd.refcount == refs[id(nd)], \
+            f"refcount {nd.refcount} != live refs {refs[id(nd)]}"
+        # No storage-less zombies: a node lives on a device or the host.
+        assert nd.replicas or nd.on_host
+        # Tree closed under parents; child link is consistent.
+        assert nd.parent is cache.root or \
+            nd.parent.hash in cache._nodes
+        assert nd.parent.children.get(nd.tokens) is nd
+    # Device replicas are live allocator frames, one reference held by
+    # the cache (plus any sharing requests).
+    for i, eng in cl.engines.items():
+        alloc = eng.rmanager.pool.alloc
+        seen = set()
+        for nd in cache._nodes.values():
+            blk = nd.replicas.get(i)
+            if blk is None:
+                continue
+            assert blk not in seen, "two nodes share one frame"
+            seen.add(blk)
+            assert alloc.refcount(blk) >= 1
+        assert len(seen) == cache.device_blocks(i)
+    # Host tier occupancy is bounded and every on_host node is present.
+    if cache.tier is not None:
+        assert cache.tier.used_blocks <= cache.tier.capacity
+        for nd in cache._nodes.values():
+            if nd.on_host:
+                assert nd.hash in cache.tier
+
+
+def _exercise_radix(pick, tier_blocks, n_ops):
+    """Shared driver for the radix-index property: ``pick`` is any
+    ``(sample_from_list, randint)`` pair — hypothesis draws or a seeded
+    PRNG — choosing the interleaving of ops."""
+    sample, randint = pick
+    cl, cache = _mk(n_inst=2, tier_blocks=tier_blocks)
+    live = {}
+    next_rid = [0]
+
+    def draw_path():
+        return [sample(_CHUNKS) for _ in range(randint(1, 4))]
+
+    for _ in range(n_ops):
+        op = sample(["insert", "acquire", "release", "evict", "drain"])
+        inst = sample(sorted(cl.engines))
+        if op == "insert":
+            next_rid[0] += 1
+            _simulate_finished_request(cl, cache, inst, draw_path(),
+                                       next_rid[0])
+        elif op == "acquire":
+            next_rid[0] += 1
+            rid = next_rid[0]
+            got = cache.acquire(inst, rid, _chain_tokens(draw_path()),
+                                max_blocks=randint(0, 5))
+            live[rid] = got
+            # Matched blocks are pinned: evicting CANNOT free them.
+            pinned_before = cache.pinned_blocks(inst)
+            cache.evict_device(inst, POOL)
+            assert cache.pinned_blocks(inst) == pinned_before
+            assert all(nd.replicas.get(inst) is not None
+                       for nd in cache._pins.get(rid, []))
+        elif op == "release" and live:
+            rid = sample(sorted(live))
+            cache.release(rid)
+            del live[rid]
+        elif op == "evict":
+            cache.evict_device(inst, randint(1, POOL))
+        elif op == "drain" and cache.tier is not None:
+            cache.tier.drain(block=True)
+        _check_invariants(cl, cache)
+    # Teardown: release every pin, evict everything -> zero leaks.
+    for rid in list(live):
+        cache.release(rid)
+    for i in cl.engines:
+        cache.evict_device(i, POOL)
+    _check_invariants(cl, cache)
+    for i, eng in cl.engines.items():
+        assert cache.device_blocks(i) == 0
+        assert eng.rmanager.pool.alloc.used_count == 0, \
+            "cache leaked device frames"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.data())
+    def test_radix_index_properties(data):
+        """Random insert/acquire/release/evict interleavings keep every
+        index invariant, and releasing everything leaks zero frames."""
+        pick = (lambda xs: data.draw(st.sampled_from(list(xs))),
+                lambda a, b: data.draw(st.integers(a, b)))
+        _exercise_radix(pick, tier_blocks=data.draw(
+            st.sampled_from([0, 6])), n_ops=data.draw(st.integers(5, 25)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("tier_blocks", [0, 6])
+def test_radix_index_properties_seeded(seed, tier_blocks):
+    """Deterministic twin of the hypothesis property so the invariants
+    run even where hypothesis is not installed."""
+    import random
+    rng = random.Random(1000 * tier_blocks + seed)
+    pick = (lambda xs: rng.choice(list(xs)), rng.randint)
+    _exercise_radix(pick, tier_blocks=tier_blocks, n_ops=25)
+
+
+def test_release_is_exactly_once_and_idempotent():
+    cl, cache = _mk(n_inst=1, tier_blocks=0)
+    _simulate_finished_request(cl, cache, 0, _CHUNKS[:3], rid=1)
+    got = cache.acquire(0, 2, _chain_tokens(_CHUNKS[:3]), max_blocks=3)
+    assert len(got) == 3
+    assert cache.pinned_blocks(0) == 3
+    cache.release(2)
+    assert cache.pinned_blocks(0) == 0
+    cache.release(2)                     # second release: no-op
+    assert all(nd.refcount == 0 for nd in cache._nodes.values())
+
+
+def test_double_acquire_without_release_asserts():
+    cl, cache = _mk(n_inst=1, tier_blocks=0)
+    _simulate_finished_request(cl, cache, 0, _CHUNKS[:2], rid=1)
+    toks = _chain_tokens(_CHUNKS[:2])
+    assert cache.acquire(0, 7, toks, max_blocks=2)
+    with pytest.raises(AssertionError):
+        cache.acquire(0, 7, toks, max_blocks=2)
+
+
+def test_host_spill_and_prefetch_round_trip_content():
+    """Evicted replicas land on the host tier byte-exact and come back
+    byte-exact into a FRESH frame on re-acquire."""
+    cl, cache = _mk(n_inst=1, tier_blocks=8)
+    eng = cl.engines[0]
+    _simulate_finished_request(cl, cache, 0, _CHUNKS[:2], rid=1)
+    orig = {nd.hash: eng.read_block_rows(nd.replicas[0])
+            for nd in cache._nodes.values()}
+    assert cache.evict_device(0, 2) == 2
+    assert cache.device_blocks(0) == 0
+    assert cache.host_blocks() == 2
+    assert eng.rmanager.pool.alloc.used_count == 0
+    got = cache.acquire(0, 2, _chain_tokens(_CHUNKS[:2]), max_blocks=2)
+    assert len(got) == 2
+    for nd in cache._pins[2]:
+        k, v = eng.read_block_rows(nd.replicas[0])
+        ok, ov = orig[nd.hash]
+        np.testing.assert_array_equal(k, ok)
+        np.testing.assert_array_equal(v, ov)
+    cache.release(2)
+
+
+def test_host_lru_eviction_drops_unreachable_subtree():
+    """A host-tier watermark eviction of a node with no device replica
+    drops its subtree — no orphan child can ever be matched again."""
+    cl, cache = _mk(n_inst=1, tier_blocks=3)
+    cache.tier.high = cache.tier.low = 1.0   # evict only when full
+    for j, path in enumerate(([_CHUNKS[0], _CHUNKS[1]],
+                              [_CHUNKS[2]], [_CHUNKS[3]])):
+        _simulate_finished_request(cl, cache, 0, path, rid=j + 1)
+    # Spill everything to host, oldest first. The 4th spill trips the
+    # watermark and LRU-evicts the oldest chain's ROOT; dropping that
+    # subtree takes its (already-spilled) child's host frame with it,
+    # so no orphan child is ever left matchable.
+    assert cache.evict_device(0, POOL) >= 4
+    assert cache.host_blocks() == 2
+    assert len(cache._nodes) == 2
+    for nd in cache._nodes.values():
+        assert nd.on_host and not nd.replicas
+    assert cache.acquire(0, 99, _chain_tokens(_CHUNKS[:2]),
+                         max_blocks=2) == []
+    cache.release(99)
+    _check_invariants(cl, cache)
+
+
+# ------------------------------------------------------------------ #
+# Engine-level: COW aliasing, token identity, exact rollback
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def served():
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_smoke_config
+    from repro.models.model import init_params
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _cache_server(params, cfg, **over):
+    from repro.serving import LLMServer, ServingConfig
+    base = dict(n_instances=1, max_batch=2, max_local_len=64,
+                pool_blocks=48, block_size=8, prefill_chunk=8,
+                prefix_cache=True, host_tier_blocks=64)
+    base.update(over)
+    return LLMServer(params, cfg, ServingConfig.smoke(**base))
+
+
+def _oracle(params, cfg, prompt, n_new):
+    import jax.numpy as jnp
+    from repro.models.model import decode_step
+    from repro.models.prefill import prefill
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def test_cached_prefix_token_identity_vs_oracle(served):
+    """Cold, warm-full-hit (COW) and warm-partial-hit admissions all
+    produce the oracle's exact token stream."""
+    from repro.serving import SamplingParams
+    cfg, params = served
+    rng = np.random.default_rng(60)
+    server = _cache_server(params, cfg)
+    full = rng.integers(0, cfg.vocab_size, 24).tolist()    # 3 blocks
+    partial = full[:16] + rng.integers(0, cfg.vocab_size, 6).tolist()
+    want_full = _oracle(params, cfg, full, 6)
+    want_partial = _oracle(params, cfg, partial, 6)
+    sp = SamplingParams(max_new_tokens=6)
+    assert server.submit(full, sp).result() == want_full       # cold
+    assert server.submit(full, sp).result() == want_full       # warm full
+    assert server.submit(partial, sp).result() == want_partial  # partial
+    assert server.metrics["cache_hit_tokens"] == 23 + 16
+
+
+def test_host_prefetch_token_identity(served):
+    """A chain that round-tripped through the host tier decodes the
+    oracle's exact tokens."""
+    from repro.serving import SamplingParams
+    cfg, params = served
+    rng = np.random.default_rng(61)
+    server = _cache_server(params, cfg, pool_blocks=9, max_batch=1)
+    sp = SamplingParams(max_new_tokens=4)
+    prompts = [rng.integers(0, cfg.vocab_size, 24).tolist()
+               for _ in range(3)]
+    for p in prompts:
+        assert server.submit(p, sp).result() == _oracle(params, cfg, p, 4)
+    assert server.metrics["host_spill_bytes"] > 0
+    for p in prompts:
+        assert server.submit(p, sp).result() == _oracle(params, cfg, p, 4)
+    assert server.metrics["host_prefetch_bytes"] > 0
+
+
+def test_cow_tail_never_aliases_shared_frame(served):
+    """Mid-decode, a warm full-hit's tail block is request-private and
+    the shared frames' bytes never change."""
+    from repro.serving import SamplingParams
+    cfg, params = served
+    rng = np.random.default_rng(62)
+    server = _cache_server(params, cfg)
+    cl = server.cluster
+    eng = cl.engines[0]
+    prompt = rng.integers(0, cfg.vocab_size, 24).tolist()
+    server.submit(prompt, SamplingParams(max_new_tokens=4)).result()
+    cache = cl.prefix_cache
+    node_blocks = {nd.hash: nd.replicas[0]
+                   for nd in cache._nodes.values()}
+    assert len(node_blocks) == 3
+    baseline = {h: tuple(np.asarray(a).copy()
+                         for a in eng.read_block_rows(b))
+                for h, b in node_blocks.items()}
+    h = server.submit(prompt, SamplingParams(max_new_tokens=6))
+    stepped = 0
+    while not h._req.output and stepped < 50:     # drive past admission
+        server.step()
+        stepped += 1
+    rid = h.req_id
+    rb = eng.rmanager.pool.requests[rid]
+    shared_frames = set(node_blocks.values())
+    # Leading blocks ARE the shared frames (table-edit admission)...
+    assert set(rb.blocks[:2]) <= shared_frames
+    # ...but the COW tail and decode appends are private frames.
+    assert not set(rb.blocks[2:]) & shared_frames
+    h.result()
+    for hsh, b in node_blocks.items():
+        for got, want in zip(eng.read_block_rows(b), baseline[hsh]):
+            np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_cancel_mid_prefill_with_cache_pins_rolls_back_exactly(served,
+                                                               monkeypatch):
+    """PR-5 free-spy test extended to the new tiers: a cancel during a
+    streaming admission that holds cache pins AND creditor reservations
+    restores every allocator exactly, releases each frame at most once,
+    unpins every radix node, and leaves the host tier untouched."""
+    import repro.serving.cluster as cluster_mod
+    from repro.serving import LLMServer, SamplingParams, ServingConfig
+    cfg, params = served
+    rng = np.random.default_rng(63)
+    server = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=2, max_batch=2, max_local_len=16, pool_blocks=32,
+        block_size=4, prefix_cache=True, host_tier_blocks=32))
+    cl = server.cluster
+    cache = cl.prefix_cache
+    sp = SamplingParams(max_new_tokens=4)
+    # Warm the cache with the shared prefix: 8 tokens = 2 full blocks,
+    # small enough to stay LOCAL (spanning requests skip cache insert).
+    prefix = rng.integers(0, cfg.vocab_size, 8).tolist()
+    server.submit(prefix, sp).result()
+    assert sum(cache.device_blocks(i) for i in cl.engines) >= 2
+
+    def snap():
+        """Allocator state, with cache-owned frames factored out: the
+        cancelled admission may legitimately GROW the cache (acquire
+        materializes D2D replicas on the admitting instance and those
+        persist — they are cache state, not request state). Exactness
+        means: zero non-cache frames outstanding beyond the request
+        table, and every used frame accounted for."""
+        out = {}
+        for i, e in cl.engines.items():
+            a = e.rmanager.pool.alloc
+            cache_blks = {nd.replicas[i] for nd in cache._nodes.values()
+                          if i in nd.replicas}
+            used = set(range(a.num_blocks)) - set(a._free)
+            req_blks = {b for rb in e.rmanager.pool.requests.values()
+                        for b in rb.blocks}
+            assert used >= cache_blks | req_blks
+            leaked = used - cache_blks - req_blks
+            out[i] = (len(leaked), a.reserved,
+                      {r: list(rb.blocks)
+                       for r, rb in e.rmanager.pool.requests.items()})
+        return out
+
+    before = snap()
+    tier_before = (cl.host_tier.used_blocks, cl.host_tier.stats.spills)
+    frees = collections.Counter()
+    orig_free = BlockAllocator.free
+
+    def spy_free(self, blocks):
+        for b in blocks:
+            frees[(id(self), b)] += 1
+        orig_free(self, blocks)
+
+    monkeypatch.setattr(BlockAllocator, "free", spy_free)
+    orig_write = cluster_mod.PrefixSink.write
+
+    def write_then_cancel(self, *a, **kw):
+        orig_write(self, *a, **kw)
+        server.cancel(self._req_id)
+
+    monkeypatch.setattr(cluster_mod.PrefixSink, "write",
+                        write_then_cancel)
+    # 40-token prompt reusing the cached prefix: pins both nodes,
+    # commits creditor spans, then cancels at the first creditor write.
+    prompt = prefix + rng.integers(0, cfg.vocab_size, 32).tolist()
+    h = server.submit(prompt, sp)
+    for _ in range(30):
+        if h.done:
+            break
+        server.step()
+    assert h.status.name == "CANCELLED"
+    assert snap() == before, "rollback was not exact"
+    assert not cache._pins, "cache pins survived the cancel"
+    assert all(nd.refcount == 0 for nd in cache._nodes.values())
+    assert (cl.host_tier.used_blocks,
+            cl.host_tier.stats.spills) == tier_before
+    # No frame was freed more than once per release path (the shared
+    # frames must survive: the cache still references them).
+    assert all(n == 1 for n in frees.values()), frees
+    cached = {blk for nd in cache._nodes.values()
+              for blk in nd.replicas.values()}
+    assert cached, "cache lost its frames in the rollback"
+    # Cluster still serves warm hits after the rollback.
+    hits0 = server.metrics["cache_hit_tokens"]
+    server.submit(prefix, sp).result()
+    assert server.metrics["cache_hit_tokens"] > hits0
+
+
+# ------------------------------------------------------------------ #
+# Algorithm-1 plumbing: cache_blocks as penalized creditor capacity
+# ------------------------------------------------------------------ #
+def _sched():
+    from repro.configs import get_smoke_config
+    from repro.serving.perfmodel import InstancePerfModel
+    from repro.serving.scheduler import GreedyScheduler
+    perf = InstancePerfModel(get_smoke_config("olmo-1b"))
+    return GreedyScheduler(perf, block_size=8)
+
+
+def test_creditor_cap_counts_cache_blocks():
+    from repro.serving.scheduler import InstanceView
+    s = _sched()
+    v = InstanceView(inst_id=0, batch_size=2, mem_blocks_total=32,
+                     mem_blocks_used=30, cache_blocks=10)
+    assert s._creditor_cap(v) == 2 - 2 + 10
+    assert s._creditor_cap(v, with_cache=False) == 0
+
+
+def test_striped_gain_charges_spill_penalty():
+    """Same total capacity, but capacity made of evictable cache frames
+    must be charged the host-link spill cost: the modeled gain is
+    strictly smaller than for plain free memory."""
+    from repro.serving.scheduler import InstanceView
+    s = _sched()
+
+    def debtor():
+        return InstanceView(
+            inst_id=0, batch_size=1, mem_blocks_total=32,
+            mem_blocks_used=30,
+            requests={7: (30 * 8, 30, True)})
+
+    # Identical creditors (same batch, same request) except that one's
+    # headroom is plain free memory and the other's is cache frames.
+    free_c = InstanceView(inst_id=1, batch_size=1, mem_blocks_total=32,
+                          mem_blocks_used=2, cache_blocks=0,
+                          requests={1: (16, 2, True)})
+    cache_c = InstanceView(inst_id=1, batch_size=1, mem_blocks_total=32,
+                           mem_blocks_used=30, cache_blocks=28,
+                           requests={1: (16, 2, True)})
+    splits = [(0, 8)]
+    g_free = s._striped_gain(debtor(), [free_c], 7, splits)
+    g_cache = s._striped_gain(debtor(), [cache_c], 7, splits)
+    assert g_cache < g_free
+
+
+def test_heartbeat_cache_blocks_reaches_views():
+    from repro.configs import get_smoke_config
+    from repro.serving.gmanager import GManager
+    from repro.serving.perfmodel import InstancePerfModel
+    from repro.serving.protocol import Heartbeat
+    gm = GManager(InstancePerfModel(get_smoke_config("olmo-1b")),
+                  block_size=8)
+    gm.on_heartbeat(Heartbeat(inst_id=0, seq=1, full=True, entries=[],
+                              batch_size=1, mem_blocks_total=32,
+                              mem_blocks_used=20, cache_blocks=12),
+                    now=0.0)
+    (view,) = gm._views()
+    assert view.cache_blocks == 12
