@@ -17,7 +17,7 @@ import traceback
 from benchmarks import (bench_context_length, bench_debtor_creditor,
                         bench_distattn_methods, bench_e2e_traces,
                         bench_kv_movement, bench_prefix_cache,
-                        bench_ship_query_vs_kv)
+                        bench_sharded_pool, bench_ship_query_vs_kv)
 from benchmarks.benchjson import REPO_ROOT, collect_bench_jsons, git_sha
 
 BENCHES = [
@@ -28,6 +28,7 @@ BENCHES = [
     ("fig11_distattn_methods", bench_distattn_methods.main),
     ("fig12_kv_movement", bench_kv_movement.main),
     ("issue6_prefix_cache", bench_prefix_cache.main),
+    ("issue7_sharded_pool", bench_sharded_pool.main),
 ]
 
 

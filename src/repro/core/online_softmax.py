@@ -64,6 +64,23 @@ def merge_partials(o: jax.Array, m: jax.Array, l: jax.Array,
     return o_g, m_g, l_g
 
 
+def merge_partials_collective(o: jax.Array, m: jax.Array, l: jax.Array,
+                              axis_name) -> Partial:
+    """Merge per-shard partials across a mesh axis (paper Eq. 3, collective).
+
+    The shard_map counterpart of ``merge_partials``: each shard holds ONE
+    partial (its MicroAttention over locally-resident KV blocks) and only
+    the per-head scalars ``(m, l)`` plus the value-vector ``o`` cross the
+    interconnect — pmax for the running max, psum for the rescaled sums.
+    ``axis_name`` may be a single mesh axis or a tuple of axes.
+    """
+    m_g = jax.lax.pmax(m, axis_name)
+    scale = _safe_scale(m, m_g)
+    l_g = jax.lax.psum(l * scale, axis_name)
+    o_g = jax.lax.psum(o * scale[..., None], axis_name)
+    return o_g, m_g, l_g
+
+
 def finalize(o: jax.Array, l: jax.Array) -> jax.Array:
     """Normalize a merged partial into the attention output.
 

@@ -177,3 +177,33 @@ def paged_micro_attention(q, pool_k, pool_v, table, tail_len, *,
         qp, kp, vp, table.astype(jnp.int32), nblk,
         tail_len.astype(jnp.int32), scale=scale, interpret=interpret)
     return o[:, :, :D], m, l
+
+
+def paged_micro_attention_ranks(q, pools_k, pools_v, tables, tails, *,
+                                scale=None, backend=None):
+    """Decode MicroAttention partials over a stacked set of rank pools.
+
+    q [R,H,D] broadcast to every rank; pools_k/v [NR,NB,bs,K,D] one pool
+    slab per rank; tables [NR,R,MB]; tails [NR,R]. Returns stacked
+    partials (o [NR,R,H,D], m [NR,R,H], l [NR,R,H]) — merge with
+    ``merge_partials(axis=0)`` (vmap path) or compute per-shard inside
+    shard_map and merge with ``merge_partials_collective``.
+    """
+    return jax.vmap(
+        lambda pk, pv, tb, tl: paged_micro_attention(
+            q, pk, pv, tb, tl, scale=scale, backend=backend)
+    )(pools_k, pools_v, tables, tails)
+
+
+def paged_prefill_attention_ranks(q, pools_k, pools_v, tables, tails, *,
+                                  scale=None, backend=None):
+    """Prefill-chunk MicroAttention partials over stacked rank pools.
+
+    q [C,H,D] chunk queries broadcast to every rank; pools_k/v
+    [NR,NB,bs,K,D]; tables [NR,MB]; tails [NR]. Returns stacked partials
+    (o [NR,C,H,D], m [NR,C,H], l [NR,C,H]).
+    """
+    return jax.vmap(
+        lambda pk, pv, tb, tl: paged_prefill_attention(
+            q, pk, pv, tb, tl, scale=scale, backend=backend)
+    )(pools_k, pools_v, tables, tails)

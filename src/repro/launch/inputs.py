@@ -219,7 +219,7 @@ def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
         K, hd = cfg.num_kv_heads, cfg.head_dim
         dt = jnp.dtype(cfg.dtype)
 
-        pool = _sds((L, NP, NB + 1, bs, K, hd), dt)
+        pool = _sds((L, NP, NB, bs, K, hd), dt)
         kvh = None if "model" in paxes else "model"
         pool_spec = NamedSharding(mesh, P(None, paxes, None, None, kvh,
                                           None))

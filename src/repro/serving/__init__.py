@@ -48,6 +48,34 @@ back (H2D through the stager) — ``server.metrics`` surfaces occupancy,
 hit tokens, and spill/prefetch bytes; ``bench_prefix_cache`` gates warm
 TTFT >= 2x cold and prefetch stalls <= 0.1 in CI.
 
+Mesh-sharded global KV pool (opt-in)
+------------------------------------
+``ServingConfig(global_pool=True)`` folds the per-instance pool tensors
+into ONE cluster-wide ``GlobalKVPool`` array ``[ranks, L, NB, bs, K,
+hd]`` whose rank axis can be sharded over a device mesh:
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    layout = ServeLayout(batch_axes=("data",), pool_axes=("data",))
+    server = LLMServer(params, cfg,
+                       ServingConfig.v5e(global_pool=True),
+                       mesh=mesh, layout=layout)
+
+Knobs: ``ServingConfig.global_pool`` turns the mode on;
+``LLMServer(..., mesh=...)`` attaches the mesh (omit it for the
+single-device vmap path — same math, no collectives); ``layout``
+(``ServeLayout.pool_axes``) picks which mesh axes shard the rank axis
+(``("data",)`` or ``("data", "model")``; n_instances must divide their
+total size). Every engine's rManager then aliases its ``RankKVPool``
+slice of the global allocator, decode/prefill run
+``decode_step_global``/``prefill_chunk_global`` (per-rank paged
+partials under ``shard_map``, LSE-merged with pmax/psum — queries are
+broadcast, KV never moves), and ``StripedMove`` legs, streaming
+creditor writes, and prefix-cache materialization become slice
+assignments inside the one tensor (remote DMA under GSPMD). The
+donated-buffer zero-copy discipline is unchanged and CI-gated
+(``decode_pool_zero_copy``); ``bench_sharded_pool`` gates rank-scaling
+throughput.
+
 Internal layers (exported for tests/benchmarks, not the serving API)
 --------------------------------------------------------------------
 ``Cluster`` executes steps: N ``InstanceEngine``s (each owning a
@@ -60,6 +88,7 @@ from repro.serving.cluster import Cluster
 from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
+from repro.serving.globalpool import GlobalKVPool
 from repro.serving.hosttier import HostKVTier
 from repro.serving.kvpool import BlockAllocator, RankKVPool
 from repro.serving.prefixcache import RadixPrefixCache
@@ -77,5 +106,5 @@ __all__ = [
     "InstancePerfModel", "cluster_tps", "Request", "RequestIdAllocator",
     "RequestState", "SamplingParams", "RManager", "GreedyScheduler",
     "InstanceView", "SpanLeg", "StripedMove", "HostKVTier",
-    "RadixPrefixCache",
+    "RadixPrefixCache", "GlobalKVPool",
 ]

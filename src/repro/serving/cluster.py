@@ -45,6 +45,8 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
@@ -94,6 +96,12 @@ class PrefixSink:
         self._bs = cluster.block_size
 
     @property
+    def spans(self) -> List[Tuple[int, int, List[int]]]:
+        """Committed ``(inst, start_token, block_ids)`` spans, in
+        global token order — the creditor part of the request's chain."""
+        return [(d, st, list(b)) for d, st, b in self._spans]
+
+    @property
     def rank_ids(self) -> List[int]:
         """Creditor instance ids, deduplicated, in prefix order."""
         out: List[int] = []
@@ -108,6 +116,27 @@ class PrefixSink:
         for d, start, blocks in self._spans:
             cov[d] += min(max(upto - start, 0), len(blocks) * self._bs)
         return cov
+
+    def row_targets(self, t0: int, t1: int):
+        """Per-token (rank, block, offset) of global tokens [t0, t1)
+        in the committed creditor spans — the global-pool prefill step
+        writes creditor rows itself with these (one deferred scatter
+        replaces the ``write``/host_kv_rows round trip)."""
+        n = t1 - t0
+        ranks = np.zeros(n, np.int32)
+        blks = np.zeros(n, np.int32)
+        offs = np.zeros(n, np.int32)
+        for d, start, blocks in self._spans:
+            lo = max(t0, start)
+            hi = min(t1, start + len(blocks) * self._bs)
+            if lo >= hi:
+                continue
+            b, o = rows_for_token_range(blocks, self._bs,
+                                        lo - start, hi - start)
+            ranks[lo - t0:hi - t0] = d
+            blks[lo - t0:hi - t0] = b
+            offs[lo - t0:hi - t0] = o
+        return ranks, blks, offs
 
     def write(self, t0: int, k, v) -> None:
         """Scatter global prefix rows [t0, t0 + n) into creditor pools.
@@ -150,7 +179,8 @@ class PrefixSink:
 class Cluster:
     def __init__(self, params, cfg: ModelConfig,
                  config: Optional[ServingConfig] = None, *,
-                 perf: Optional[InstancePerfModel] = None):
+                 perf: Optional[InstancePerfModel] = None,
+                 mesh=None, layout=None):
         config = config if config is not None else ServingConfig()
         self.cfg = cfg
         self.config = config
@@ -162,12 +192,36 @@ class Cluster:
         # async_movement=True overlaps them with decode compute,
         # False is the serial baseline (bench_kv_movement A/Bs the two).
         self.stager = AsyncStager(overlap=config.async_movement)
+        # Global-pool mode: ONE [n_instances, L, NB, bs, K, hd] tensor
+        # holds every instance's KV (optionally sharded over ``mesh``
+        # per ``layout.pool_axes``); every engine aliases its rank's
+        # slice + allocator, moves become intra-tensor slice copies and
+        # decode/prefill run decode_step_global / prefill_chunk_global.
+        self.mesh = mesh
+        self.gpool = None
+        if config.global_pool and cfg.family in ("dense", "moe"):
+            from repro.serving.globalpool import GlobalKVPool
+            pool_axes = (tuple(layout.pool_axes) if layout is not None
+                         else ("data",))
+            if mesh is not None:
+                import jax
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as P
+                # Params (and step scalars) replicate over the mesh so
+                # GSPMD only ever shards the pool's rank axis.
+                params = jax.device_put(params,
+                                        NamedSharding(mesh, P()))
+            self.gpool = GlobalKVPool(config.n_instances,
+                                      config.pool_blocks,
+                                      config.block_size, cfg, mesh=mesh,
+                                      pool_axes=pool_axes)
         self.engines: Dict[int, InstanceEngine] = {
             i: InstanceEngine(params, cfg, max_batch=config.max_batch,
                               max_local_len=config.max_local_len,
                               pool_blocks=config.pool_blocks,
                               block_size=config.block_size, inst_id=i,
-                              prefill_chunk=config.prefill_chunk)
+                              prefill_chunk=config.prefill_chunk,
+                              gpool=self.gpool)
             for i in range(config.n_instances)
         }
         for eng in self.engines.values():
@@ -369,21 +423,55 @@ class Cluster:
         # order any later read of the destination rows after the write;
         # the stager only bounds how many chains stay in flight
         # (serial mode blocks each one: the A/B baseline).
+        # The owner's sequence-ordered global chain (req_chain) feeds
+        # satellite prefix-cache insertion for spanning requests; a
+        # fully-local request gets one lazily on its first move so the
+        # rewrite below can track every relocated block.
+        if owner.req_chain.get(mv.req_id) is None:
+            rb0 = owner.rmanager.pool.requests.get(mv.req_id)
+            if rb0 is not None:
+                owner.req_chain[mv.req_id] = [(owner.inst_id, b)
+                                              for b in rb0.blocks]
         for dst_id, n in legs:
             dst = self.engines[dst_id]
-            k, v = src.extract_prefix_kv(req, n)
-            blocks = dst.rmanager.commit_move_in(
-                mv.req_id, n, at_front=(dst_id == owner.inst_id))
-            dst.host_kv(mv.req_id, blocks, k, v)
-            self.stager.stage((dst.pool_k, dst.pool_v))
-            src.rmanager.move_out_prefix(mv.req_id, n)
+            src_blocks = list(
+                src.rmanager.pool.requests[mv.req_id].blocks[:n])
+            if self.gpool is not None:
+                # Global-pool mode: the leg is ONE intra-tensor slice
+                # copy between rank slices (remote DMA under GSPMD when
+                # the pool is mesh-sharded) + allocator/table edits.
+                blocks = dst.rmanager.commit_move_in(
+                    mv.req_id, n, at_front=(dst_id == owner.inst_id))
+                self.gpool.copy_blocks(src.inst_id, src_blocks,
+                                       dst.inst_id, blocks)
+                self.stager.stage((self.gpool.k, self.gpool.v))
+                src.rmanager.move_out_prefix(mv.req_id, n)
+                c = self.cfg
+                nbytes = (2 * c.num_layers * n * bs * c.num_kv_heads *
+                          c.head_dim) * self.gpool.k.dtype.itemsize
+            else:
+                k, v = src.extract_prefix_kv(req, n)
+                blocks = dst.rmanager.commit_move_in(
+                    mv.req_id, n, at_front=(dst_id == owner.inst_id))
+                dst.host_kv(mv.req_id, blocks, k, v)
+                self.stager.stage((dst.pool_k, dst.pool_v))
+                src.rmanager.move_out_prefix(mv.req_id, n)
+                nbytes = int(k.size + v.size) * k.dtype.itemsize
             if dst_id != owner.inst_id:
                 insts = owner.remote_insts.setdefault(mv.req_id, [])
                 if dst_id not in insts:
                     insts.append(dst_id)
-            nbytes = int(k.size + v.size) * k.dtype.itemsize
             src.stats.kv_moved += nbytes
             src.stats.tokens_moved_steps.append(n * bs)
+            # Rewrite the chain entries in place (ID-based: the moved
+            # blocks keep their position in the global token order).
+            chain = owner.req_chain.get(mv.req_id)
+            if chain is not None and blocks is not None:
+                remap = {(mv.src_inst, sb): (dst_id, nb)
+                         for sb, nb in zip(src_blocks, blocks)}
+                for ci, e in enumerate(chain):
+                    if e in remap:
+                        chain[ci] = remap.pop(e)
         # A reclaim that drained the source span drops it from the
         # owner's span map (and frees the host's metadata).
         if mv.src_inst != owner.inst_id and \
@@ -470,6 +558,7 @@ class Cluster:
                         if self.prefix_cache is not None:
                             self.prefix_cache.release(req.req_id)
                         e.remote_insts.pop(req.req_id, None)
+                        e.req_chain.pop(req.req_id, None)
                         # Reclaim surviving creditor-hosted spans too.
                         for j, ej in self.engines.items():
                             if j not in self._dead:
@@ -479,6 +568,10 @@ class Cluster:
 
     def add_instance(self, params) -> int:
         """Elastic scale-out: new instance joins as a fresh creditor."""
+        if self.gpool is not None:
+            raise RuntimeError(
+                "add_instance is unsupported in global-pool mode: the "
+                "pool tensor's rank axis is fixed at construction")
         new_id = max(self.engines) + 1
         ref = next(iter(self.engines.values()))
         self.engines[new_id] = InstanceEngine(

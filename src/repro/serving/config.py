@@ -32,6 +32,11 @@ class ServingConfig:
     # --- cluster shape ------------------------------------------------ #
     n_instances: int = 2           # model replicas (paper: instances)
     max_batch: int = 8             # decode slots per instance
+    global_pool: bool = False      # fold per-instance pools into ONE
+    #                                mesh-shardable [ranks, L, NB, bs,
+    #                                K, hd] tensor (GlobalKVPool); moves
+    #                                and creditor reads become slice
+    #                                assignments / shard_map partials
     # --- per-instance KV pool ----------------------------------------- #
     max_local_len: int = 128       # per-request LOCAL quota (tokens)
     pool_blocks: int = 64          # blocks in each instance's pool

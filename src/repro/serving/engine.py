@@ -64,6 +64,8 @@ from repro.models.model import DecodeState, decode_step, init_decode_state
 from repro.models.prefill import (decode_step_paged, prefill,
                                   prefill_chunk_paged, repack_ring,
                                   write_slot)
+from repro.serving.sharded_step import (decode_step_global,
+                                        prefill_chunk_global)
 from repro.serving.kvpool import (build_local_tables, prefix_tables,
                                   read_pool_rows, rows_for_token_range,
                                   scatter_pool_rows, table_bucket,
@@ -162,7 +164,8 @@ class InstanceEngine:
     def __init__(self, params, cfg: ModelConfig, *, max_batch: int = 8,
                  max_local_len: int = 256, pool_blocks: int = 1024,
                  block_size: int = 16, inst_id: int = 0,
-                 capacity_factor: float = -1.0, prefill_chunk: int = 32):
+                 capacity_factor: float = -1.0, prefill_chunk: int = 32,
+                 gpool=None):
         self.params = params
         self.cfg = cfg
         self.inst_id = inst_id
@@ -170,25 +173,46 @@ class InstanceEngine:
         self.max_local_len = max_local_len
         self.block_size = block_size
         self.prefill_chunk = prefill_chunk
-        self.rmanager = RManager(inst_id, pool_blocks, block_size)
+        # Global-pool mode (cluster-installed GlobalKVPool): this
+        # engine's KV lives in rank ``inst_id``'s slice of ONE
+        # cluster-wide [NR, L, NB, bs, K, hd] tensor and the rManager
+        # aliases the shared per-rank allocator, so the in-process
+        # engine and the shard_map step see one layout.
+        self.gpool = gpool
+        self.rmanager = RManager(
+            inst_id, pool_blocks, block_size,
+            pool=(gpool.ranks[inst_id] if gpool is not None else None))
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.waiting: List[Request] = []
         self.stats = CommStats()
         self._key = jax.random.PRNGKey(1234 + inst_id)
+        if gpool is not None and gpool.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            self._key = jax.device_put(
+                self._key, NamedSharding(gpool.mesh, P()))
         self._finished_events: List[int] = []
         self._can_pool = cfg.family in ("dense", "moe")
+        self._pool_k = self._pool_v = None
         if self._can_pool:
             assert max_local_len >= 2 * block_size, \
                 "local quota must cover at least two blocks"
-            L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
-            dt = jnp.dtype(cfg.dtype)
-            # THE serving KV store: every local or hosted byte lives here.
-            self.pool_k = jnp.zeros((L, pool_blocks, block_size, K, hd), dt)
-            self.pool_v = jnp.zeros((L, pool_blocks, block_size, K, hd), dt)
+            if gpool is None:
+                L, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+                dt = jnp.dtype(cfg.dtype)
+                # THE serving KV store: every local or hosted byte
+                # lives here (global mode: in gpool.k/gpool.v instead).
+                self._pool_k = jnp.zeros(
+                    (L, pool_blocks, block_size, K, hd), dt)
+                self._pool_v = jnp.zeros(
+                    (L, pool_blocks, block_size, K, hd), dt)
             self.state: Optional[DecodeState] = None
         else:
-            self.pool_k = self.pool_v = None
             self.state = init_decode_state(cfg, max_batch, max_local_len)
+        # Sequence-ordered GLOBAL block chain [(inst_id, block_id)] per
+        # request — maintained for creditor-spanning (and moved)
+        # requests so _cache_insert can adopt the striped frames.
+        self.req_chain: Dict[int, List[Tuple[int, int]]] = {}
         # Owner-side placement metadata: req_id -> creditor inst ids
         # hosting prefix spans (the KV itself is in THEIR pools).
         self.remote_insts: Dict[int, List[int]] = {}
@@ -206,6 +230,32 @@ class InstanceEngine:
         # Admission walks it for the longest cached prefix; _finish
         # inserts the request's chain back.
         self.prefix_cache = None
+
+    # The pool handles are properties so the whole serving stack —
+    # stager staging, zero-copy pointer checks, prefix-cache block
+    # transport — reads/threads the SAME arrays in both modes: the
+    # private per-instance tensors, or the one global tensor.
+    @property
+    def pool_k(self):
+        return self._pool_k if self.gpool is None else self.gpool.k
+
+    @pool_k.setter
+    def pool_k(self, val):
+        if self.gpool is None:
+            self._pool_k = val
+        else:
+            self.gpool.k = val
+
+    @property
+    def pool_v(self):
+        return self._pool_v if self.gpool is None else self.gpool.v
+
+    @pool_v.setter
+    def pool_v(self, val):
+        if self.gpool is None:
+            self._pool_v = val
+        else:
+            self.gpool.v = val
 
     # ----------------------------------------------------------------- #
     def submit(self, req: Request) -> None:
@@ -319,6 +369,11 @@ class InstanceEngine:
         functional dependencies order it against later pool updates."""
         blk = np.full(n_rows, dst_blk, np.int32)
         off = np.arange(n_rows, dtype=np.int32)
+        if self.gpool is not None:
+            k, v = self.gpool.read_blocks(self.inst_id, [src_blk])
+            self.gpool.scatter_rows(self.inst_id, blk, off,
+                                    k[:, :n_rows], v[:, :n_rows])
+            return
         k = read_pool_rows(self.pool_k, [src_blk],
                            self.block_size)[:, :n_rows]
         v = read_pool_rows(self.pool_v, [src_blk],
@@ -432,6 +487,17 @@ class InstanceEngine:
                         self.cfg.head_dim)
             itemsize = jnp.dtype(self.cfg.dtype).itemsize
             self.stats.kv_moved += int(2 * L * n_over * K * hd) * itemsize
+            # Record the GLOBAL chain — cached + striped creditor +
+            # local tail blocks in token order (with a sink, n_cached is
+            # always block-aligned: a full-prompt COW hit implies
+            # n_over == 0). _cache_insert adopts it on finish.
+            local = self.rmanager.pool.requests[rid].blocks
+            m = n_cached // self.block_size
+            chain = [(self.inst_id, b) for b in local[:m]]
+            for inst, _start, blks in sink.spans:
+                chain += [(inst, b) for b in blks]
+            chain += [(self.inst_id, b) for b in local[m:]]
+            self.req_chain[rid] = chain
         return logits
 
     def _stream_prefill(self, req: Request, n_over: int, n_local: int,
@@ -454,6 +520,9 @@ class InstanceEngine:
         pool rows carry position-encoded KV, so attention over the
         union of the covered tables is exact.
         """
+        if self.gpool is not None:
+            return self._stream_prefill_global(req, n_over, n_local, sink,
+                                               n_cached, write_from)
         rid = req.req_id
         T = len(req.prompt)
         bs, C = self.block_size, self.prefill_chunk
@@ -518,6 +587,76 @@ class InstanceEngine:
             sink.flush()
         return logits
 
+    def _stream_prefill_global(self, req: Request, n_over: int,
+                               n_local: int, sink, n_cached: int = 0,
+                               write_from: int = 0):
+        """``_stream_prefill`` over the GLOBAL pool tensor.
+
+        One ``prefill_chunk_global`` per chunk: the prefix partial runs
+        over EVERY rank's slice (vmap, or shard_map + collective merge
+        under a mesh) and creditor-striped rows are written by the SAME
+        deferred in-step scatter as owner rows — ``sink.write``'s
+        host_kv_rows round-trip disappears; the sink survives only as
+        the reservation/coverage ledger (its flush is a no-op drain).
+        """
+        rid = req.req_id
+        T = len(req.prompt)
+        bs, C = self.block_size, self.prefill_chunk
+        gpool = self.gpool
+        pool = self.rmanager.pool
+        NB = pool.alloc.num_blocks
+        local_blocks = pool.requests[rid].blocks
+        cred_ids = list(sink.rank_ids) if sink is not None else []
+        cred_end = n_cached + n_over     # first locally-written token
+        logits = None
+        for t0 in range(n_cached, T, C):
+            if req.cancelled:
+                return _CANCELLED
+            t1 = min(t0 + C, T)
+            n_valid = t1 - t0
+            toks = np.zeros(C, np.int32)
+            toks[:n_valid] = req.prompt[t0:t1]
+            # Per-row (rank, block, offset) target; padded rows and
+            # suppressed rewrites keep the out-of-range block sentinel.
+            wrank = np.full(C, self.inst_id, np.int32)
+            wblk = np.full(C, NB, np.int32)
+            woff = np.zeros(C, np.int32)
+            if sink is not None and t0 < cred_end:
+                hi = min(t1, cred_end)
+                rr, bb, oo = sink.row_targets(t0, hi)
+                wrank[:hi - t0] = rr
+                wblk[:hi - t0] = bb
+                woff[:hi - t0] = oo
+            lo = max(t0, cred_end, write_from)
+            if lo < t1:
+                blk, off = rows_for_token_range(local_blocks, bs,
+                                                lo - n_over, t1 - n_over)
+                wblk[lo - t0:t1 - t0] = blk
+                woff[lo - t0:t1 - t0] = off
+            # Coverage over ALL global ranks: the owner's cached+written
+            # prefix, each creditor's streamed span, zero elsewhere.
+            covered = [0] * gpool.n_ranks
+            covered[self.inst_id] = min(
+                n_cached + max(t0 - cred_end, 0), n_local)
+            if sink is not None:
+                cov = sink.coverage(min(t0, cred_end))
+                for d in cred_ids:
+                    covered[d] = cov[d]
+            needed = max(1, max(-(-c // bs) for c in covered))
+            tables, tails = prefix_tables(gpool.ranks, rid, covered,
+                                          table_bucket(needed))
+            logits, gpool.k, gpool.v, k_c, v_c = prefill_chunk_global(
+                self.params, self.cfg, toks, t0, n_valid,
+                gpool.k, gpool.v, tables[:, 0], tails[:, 0],
+                wrank, wblk, woff, mesh=gpool.mesh,
+                pool_axes=gpool.pool_axes)
+            self.stats.admit_stage_bytes = max(
+                self.stats.admit_stage_bytes,
+                int((k_c.size + v_c.size) * k_c.dtype.itemsize))
+        if sink is not None:
+            sink.flush()
+        return logits
+
     def _sample_tokens(self, logits, reqs) -> np.ndarray:
         """Sampled tokens for a batch of slots: ONE device call + ONE
         host readback (not one per slot per step)."""
@@ -548,17 +687,17 @@ class InstanceEngine:
         self._release_slot(req)
 
     def _cache_insert(self, req: Request) -> None:
-        """Adopt a finished request's full local blocks into the prefix
-        cache BEFORE the chain is released — the cache's incref keeps
-        each adopted frame alive through the release's decref, so a
-        finished request's prefix spills/caches instead of dropping.
-        Creditor-spanning requests are skipped: their local chain is not
-        the global token chain (a known coverage gap — the creditor
-        spans would need gathering first)."""
+        """Adopt a finished request's full blocks into the prefix cache
+        BEFORE the chain is released — the cache's incref keeps each
+        adopted frame alive through the release's decref, so a finished
+        request's prefix spills/caches instead of dropping.
+        Creditor-SPANNING requests insert their GLOBAL chain
+        (``req_chain``: striped creditor frames + local tail, in token
+        order) via ``insert_chain_multi`` — each frame is adopted in
+        its own instance's allocator, so the striped prefix warm-hits
+        follow-up requests instead of dropping with the span."""
         cache = self.prefix_cache
         if cache is None or not self._can_pool or req.cancelled:
-            return
-        if self.remote_insts.get(req.req_id):
             return
         rb = self.rmanager.pool.requests.get(req.req_id)
         if rb is None or not rb.blocks:
@@ -567,6 +706,13 @@ class InstanceEngine:
         # last sampled token was never fed back, so its KV was never
         # written.
         tokens = list(req.prompt) + list(req.output[:-1])
+        if self.remote_insts.get(req.req_id):
+            chain = self.req_chain.get(req.req_id)
+            if chain is None:
+                return
+            total = (len(chain) - 1) * self.block_size + rb.tail_tokens
+            cache.insert_chain_multi(chain, tokens[:total])
+            return
         tokens = tokens[:rb.n_tokens(self.block_size)]
         cache.insert_chain(self.inst_id, tokens, rb.blocks)
 
@@ -613,6 +759,7 @@ class InstanceEngine:
             # (the pin list is popped), on every terminal path.
             self.prefix_cache.release(req.req_id)
         self.remote_insts.pop(req.req_id, None)
+        self.req_chain.pop(req.req_id, None)
         self._finished_events.append(req.req_id)
 
     def drain_finished(self) -> List[int]:
@@ -623,21 +770,42 @@ class InstanceEngine:
         return out
 
     # ----------------------------------------------------------------- #
-    def _step_paged(self) -> Optional[jnp.ndarray]:
-        """One decode iteration over the pool path. Returns logits."""
+    def _chain_append(self, req: Request) -> None:
+        """Keep the request's GLOBAL chain in step with the local one:
+        a decode append that opened a fresh tail block extends it."""
+        chain = self.req_chain.get(req.req_id)
+        if chain is None:
+            return
+        rb = self.rmanager.pool.requests[req.req_id]
+        if rb.tail_tokens == 1:
+            chain.append((self.inst_id, rb.blocks[-1]))
+
+    def _append_step_tokens(self) -> None:
+        """Reserve this step's token in each request's tail block. A
+        failed append means the pool is exhausted: reject loudly,
+        never corrupt (paper: reject when pool exhausted)."""
         pool = self.rmanager.pool
-        t0 = time.perf_counter()
-        # Reserve this step's token in each request's tail block. A
-        # failed append means the pool is exhausted: reject loudly,
-        # never corrupt (paper: reject when pool exhausted).
         for r in list(self.slots):
-            if r is not None and not pool.append_tokens(r.req_id, 1):
+            if r is None:
+                continue
+            if not pool.append_tokens(r.req_id, 1):
                 # Unpinned prefix-cache replicas are reclaimable: evict
                 # one and retry before rejecting the request.
                 if self._ensure_free(1) and pool.append_tokens(r.req_id,
                                                                1):
+                    self._chain_append(r)
                     continue
                 self._fail(r)
+            else:
+                self._chain_append(r)
+
+    def _step_paged(self) -> Optional[jnp.ndarray]:
+        """One decode iteration over the pool path. Returns logits."""
+        if self.gpool is not None:
+            return self._step_paged_global()
+        pool = self.rmanager.pool
+        t0 = time.perf_counter()
+        self._append_step_tokens()
         running = self.running
         if not running:
             return None
@@ -681,6 +849,69 @@ class InstanceEngine:
         # Account the paper's per-step merge traffic — q + (o, m, l) —
         # once per (request, creditor) span entry, matching the per-rank
         # partial exchanges a real deployment would make.
+        H, hd = self.cfg.num_heads, self.cfg.head_dim
+        L = self.cfg.num_layers
+        entries = sum(len(self.remote_insts.get(r.req_id, ()))
+                      for r in running)
+        self.stats.query_shipped += int(
+            entries * L * (H * hd * 2 + H * hd * 4 + 2 * H * 4))
+        return logits
+
+    def _step_paged_global(self) -> Optional[jnp.ndarray]:
+        """One decode iteration over the GLOBAL pool tensor.
+
+        One ``decode_step_global`` call covers the owner AND every
+        creditor rank: tables come from the shared per-rank allocators
+        (``gpool.ranks``), the step LSE-merges per-rank partials (vmap,
+        or shard_map + pmax/psum under a mesh), and the new token's KV
+        lands via the deferred tail scatter — the pending slot is
+        excluded from the tables (it enters as the self partial)."""
+        gpool = self.gpool
+        pool = self.rmanager.pool
+        t0 = time.perf_counter()
+        self._append_step_tokens()
+        running = self.running
+        if not running:
+            return None
+        B, NB = self.max_batch, pool.alloc.num_blocks
+        tokens = np.zeros(B, np.int32)
+        lens = np.zeros(B, np.int32)
+        wblk = np.full(B, NB, np.int32)      # NB = out of range => dropped
+        woff = np.zeros(B, np.int32)
+        req_ids = [r.req_id if r is not None else -1 for r in self.slots]
+        needed = max((len(p.requests[rid].blocks)
+                      for p in gpool.ranks for rid in req_ids
+                      if rid in p.requests), default=1)
+        tables, tails = build_local_tables(gpool.ranks, req_ids,
+                                           table_bucket(needed))
+        own = self.inst_id
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            tokens[i] = r.output[-1] if r.output else r.prompt[-1]
+            lens[i] = r.length - 1       # abs position of the new token
+            rb = pool.requests[r.req_id]
+            wblk[i] = rb.blocks[-1]
+            woff[i] = rb.tail_tokens - 1
+            # Deferred-write schedule: the pending token's slot must not
+            # be visible to the pooled partial (its row is garbage until
+            # the post-scan scatter) — it joins as the self partial.
+            if rb.tail_tokens == 1:
+                tables[own, i, len(rb.blocks) - 1] = -1
+                tails[own, i] = self.block_size
+            else:
+                tails[own, i] = rb.tail_tokens - 1
+        self.stats.host_gather_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+
+        ptr = buffer_ptr(gpool.k)
+        logits, gpool.k, gpool.v = decode_step_global(
+            self.params, self.cfg, tokens, lens, gpool.k, gpool.v,
+            tables, tails, wblk, woff, rank=own, mesh=gpool.mesh,
+            pool_axes=gpool.pool_axes)
+        if ptr is not None and buffer_ptr(gpool.k) != ptr:
+            self.stats.pool_copy_steps += 1
+
         H, hd = self.cfg.num_heads, self.cfg.head_dim
         L = self.cfg.num_layers
         entries = sum(len(self.remote_insts.get(r.req_id, ()))
@@ -743,6 +974,9 @@ class InstanceEngine:
         rank owns it, or the hosted span when this rank is a creditor
         being reclaimed (striped-plan eviction path)."""
         blocks = self.rmanager.pool.requests[req.req_id].blocks[:n_blocks]
+        if self.gpool is not None:
+            k, v = self.gpool.read_blocks(self.inst_id, blocks)
+            return k[:, None], v[:, None]
         k = read_pool_rows(self.pool_k, blocks, self.block_size)
         v = read_pool_rows(self.pool_v, blocks, self.block_size)
         return k[:, None], v[:, None]        # [L, 1, n*bs, K, hd]
@@ -752,6 +986,8 @@ class InstanceEngine:
         """One pool block's rows as independent [L, bs, K, hd] arrays
         (a gather — safe to keep after the frame is freed and reused;
         the functional dependencies order it before any overwrite)."""
+        if self.gpool is not None:
+            return self.gpool.read_blocks(self.inst_id, [block])
         k = read_pool_rows(self.pool_k, [block], self.block_size)
         v = read_pool_rows(self.pool_v, [block], self.block_size)
         return k, v
@@ -759,6 +995,10 @@ class InstanceEngine:
     def write_block_rows(self, block: int, k, v) -> None:
         """Fill one pool block from [L, bs, K, hd] rows (host or device
         arrays — an H2D prefetch upload or a D2D peer replica copy)."""
+        if self.gpool is not None:
+            self.gpool.write_blocks(self.inst_id, [block], jnp.asarray(k),
+                                    jnp.asarray(v))
+            return
         self.pool_k = write_pool_rows(self.pool_k, [block],
                                       jnp.asarray(k), self.block_size)
         self.pool_v = write_pool_rows(self.pool_v, [block],
@@ -771,6 +1011,9 @@ class InstanceEngine:
         k/v: [L, 1, n, K, hd] with n == len(blocks) * block_size (spans
         are always whole blocks).
         """
+        if self.gpool is not None:
+            self.gpool.write_blocks(self.inst_id, blocks, k[:, 0], v[:, 0])
+            return
         self.pool_k = write_pool_rows(self.pool_k, blocks, k[:, 0],
                                       self.block_size)
         self.pool_v = write_pool_rows(self.pool_v, blocks, v[:, 0],
@@ -783,6 +1026,9 @@ class InstanceEngine:
         k/v: [L, n, K, hd] with row i bound for
         ``(block_ids[i], offsets[i])`` of this pool.
         """
+        if self.gpool is not None:
+            self.gpool.scatter_rows(self.inst_id, block_ids, offsets, k, v)
+            return
         self.pool_k = scatter_pool_rows(self.pool_k, block_ids, offsets, k)
         self.pool_v = scatter_pool_rows(self.pool_v, block_ids, offsets, v)
 

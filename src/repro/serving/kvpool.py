@@ -13,6 +13,19 @@ rows (``read_pool_rows`` -> ``write_pool_rows``) + editing tables, never
 recompilation. Tables are padded to the bucketed widths returned by
 ``table_bucket`` so the decode step compiles O(#buckets) times, not
 O(#sequence-lengths).
+
+Tail-append convention (one scheme, everywhere)
+-----------------------------------------------
+Every paged step writes the step's new KV rows with a scatter of the
+form ``pool.at[wblk, woff].set(..., mode="drop")`` where ``wblk`` is a
+block INDEX and the sentinel for "this slot writes nothing" is any
+OUT-OF-RANGE index — canonically ``NB`` (one past the last real block).
+``mode="drop"`` makes the out-of-bounds write a no-op, so padded batch
+slots, ranks that don't own the written row, and suppressed prefill
+rows all use the same sentinel and the pool tensor is exactly
+``[..., NB, bs, K, hd]`` — no phantom ``NB+1`` dump slot is ever
+allocated. (``sharded_step`` historically carried a real extra dump
+block; that convention is gone — see its module docstring.)
 """
 from __future__ import annotations
 

@@ -209,12 +209,32 @@ class RadixPrefixCache:
         the leading FULL blocks are inserted. Adoption is zero-copy:
         the frame gains one cache-held allocator reference and survives
         the request's release. Returns the number of frames adopted."""
-        eng = self.cluster.engines[inst_id]
-        alloc = eng.rmanager.pool.alloc
+        return self.insert_chain_multi([(inst_id, b) for b in blocks],
+                                       tokens)
+
+    def insert_chain_multi(self, placements: Sequence[Tuple[int, int]],
+                           tokens: Sequence[int]) -> int:
+        """``insert_chain`` where block i may live on ANY instance.
+
+        ``placements``: the sequence-ordered ``(inst_id, block_id)``
+        GLOBAL chain of a finished request — for a creditor-spanning
+        request that is its striped ``PrefixSink`` frames followed by
+        the owner's local tail (``InstanceEngine.req_chain``). Each
+        adopted frame gains one cache-held reference in ITS OWN
+        instance's allocator, so a striped span survives both the
+        owner's release and the cluster's ``drop_hosted`` — and a later
+        request admitted ANYWHERE warm-hits it (``_materialize`` D2D-
+        copies from whichever replica instance is closest). The walk
+        stops at the first block on a dead instance: a radix prefix must
+        stay gap-free."""
+        live = self._live_insts()
         node = self.root
         adopted = 0
-        n = min(len(tokens) // self.bs, len(blocks))
+        n = min(len(tokens) // self.bs, len(placements))
         for i in range(n):
+            inst_id, blk = placements[i]
+            if inst_id not in live:
+                break
             chunk = tuple(int(t) for t in
                           tokens[i * self.bs:(i + 1) * self.bs])
             child = node.children.get(chunk)
@@ -225,7 +245,7 @@ class RadixPrefixCache:
                 self._nodes[child.hash] = child
                 self.stats.inserted_nodes += 1
             if inst_id not in child.replicas:
-                blk = blocks[i]
+                alloc = self.cluster.engines[inst_id].rmanager.pool.alloc
                 alloc.incref([blk])
                 alloc.rebind(blk, CACHE_OWNER)
                 child.replicas[inst_id] = blk

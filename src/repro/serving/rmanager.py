@@ -16,9 +16,15 @@ from repro.serving.protocol import Heartbeat, RequestPlacementEntry
 
 
 class RManager:
-    def __init__(self, inst_id: int, num_blocks: int, block_size: int):
+    def __init__(self, inst_id: int, num_blocks: int, block_size: int,
+                 pool: Optional[RankKVPool] = None):
         self.inst_id = inst_id
-        self.pool = RankKVPool(num_blocks, block_size)
+        # In global-pool mode the cluster hands every rManager its slice
+        # of ``GlobalKVPool.ranks`` — the SAME allocator object the
+        # sharded step's table builders read, so placement metadata is
+        # identical whether steps run in-process or under shard_map.
+        self.pool = pool if pool is not None else RankKVPool(num_blocks,
+                                                             block_size)
         self.block_size = block_size
         self._seq = 0
         self._last_reported: Dict[int, RequestPlacementEntry] = {}

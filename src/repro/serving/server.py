@@ -141,9 +141,11 @@ class LLMServer:
 
     def __init__(self, params, cfg: ModelConfig,
                  config: Optional[ServingConfig] = None, *,
-                 perf: Optional[InstancePerfModel] = None):
+                 perf: Optional[InstancePerfModel] = None,
+                 mesh=None, layout=None):
         self.config = config if config is not None else ServingConfig()
-        self.cluster = Cluster(params, cfg, self.config, perf=perf)
+        self.cluster = Cluster(params, cfg, self.config, perf=perf,
+                               mesh=mesh, layout=layout)
         self._ids = RequestIdAllocator()
         self._handles: Dict[int, RequestHandle] = {}
         self._queue: List[Request] = []      # admitted, not yet dispatched

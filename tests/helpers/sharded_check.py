@@ -45,7 +45,7 @@ def check(arch: str, pool_axes, rng_seed=0, variant="baseline"):
     nblocks = -(-T // bs)
     per_shard = R * nblocks            # generous
     NB = per_shard
-    pool_k = np.zeros((L, NP, NB + 1, bs, K, hd), np.float32)
+    pool_k = np.zeros((L, NP, NB, bs, K, hd), np.float32)
     pool_v = np.zeros_like(pool_k)
     MB = nblocks + 1
     tables = -np.ones((NP, R, MB), np.int32)

@@ -1,0 +1,150 @@
+"""Mesh-shardable global KV pool (serving.globalpool): token identity
+vs the per-instance cluster and the dense-cache oracle, zero-copy
+donation, StripedMove as intra-tensor slice copies, and spanning
+requests feeding the radix prefix cache (insert_chain_multi)."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import decode_step, init_params
+from repro.models.prefill import prefill
+from repro.serving import (Cluster, Request, SamplingParams,
+                           ServingConfig)
+import repro.serving.prefixcache as prefixcache_mod
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _setup(arch):
+    # float32: the global pool LSE-merges partials in a different order
+    # than the per-instance kernels; greedy identity must not hinge on
+    # bf16 rounding ties.
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def _run(params, cfg, prompts, n_new, *, global_pool, **overrides):
+    cl = Cluster(params, cfg, ServingConfig.smoke(
+        n_instances=3, max_batch=2, pool_blocks=32,
+        global_pool=global_pool, **overrides))
+    reqs = [Request(prompt=p, sampling=SamplingParams(max_new_tokens=n_new))
+            for p in prompts]
+    for r in reqs:
+        cl.submit(r)
+    cl.run_until_done(max_steps=400)
+    assert all(r.done for r in reqs), [r.state for r in reqs]
+    return cl, [r.output for r in reqs]
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "qwen2-moe-a2.7b"])
+def test_global_pool_token_identity_with_movement(arch):
+    """Global-pool cluster == per-instance cluster == dense oracle on a
+    mix with a spanning request (creditor striping at admission AND
+    mid-decode StripedMoves = slice copies inside the one tensor)."""
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (5, 40, 12)]
+    n_new = 10
+    refs = [_greedy_reference(params, cfg, p, n_new) for p in prompts]
+
+    cl_pi, outs_pi = _run(params, cfg, prompts, n_new, global_pool=False)
+    assert outs_pi == refs, "per-instance cluster diverged from oracle"
+
+    cl_gp, outs_gp = _run(params, cfg, prompts, n_new, global_pool=True)
+    assert outs_gp == refs, "global-pool cluster diverged from oracle"
+    assert cl_gp.gpool is not None
+    moved = sum(e.stats.kv_moved for e in cl_gp.engines.values())
+    assert moved > 0, "expected mid-stream StripedMove legs"
+
+
+def test_global_pool_zero_copy_and_shared_allocators():
+    """PR-4 discipline survives: every decode step reuses the donated
+    pool buffer in place, and each engine's rManager aliases the SAME
+    RankKVPool object the global table builders read."""
+    cfg, params = _setup("olmo-1b")
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, size=n))
+               for n in (6, 40, 11)]
+    cl, _ = _run(params, cfg, prompts, 8, global_pool=True)
+    for i, e in cl.engines.items():
+        assert e.rmanager.pool is cl.gpool.ranks[i]
+        assert e._pool_k is None          # no private pool tensors
+    copies = sum(e.stats.pool_copy_steps for e in cl.engines.values())
+    steps = sum(e.stats.decode_steps for e in cl.engines.values())
+    assert steps > 0 and copies == 0, \
+        f"donation broken: {copies}/{steps} steps re-copied the pool"
+    with pytest.raises(RuntimeError):
+        cl.add_instance(params)           # rank axis is fixed
+
+
+def test_spanning_request_inserts_into_prefix_cache():
+    """Satellite: a request striped across MULTIPLE creditors adopts
+    its frames into the radix cache on finish, and a follow-up with the
+    same prompt warm-hits it — in global-pool AND per-instance mode."""
+    cfg, params = _setup("olmo-1b")
+    rng = np.random.default_rng(11)
+    prompt = list(rng.integers(0, cfg.vocab_size, size=40))
+
+    inserted = []
+    orig = prefixcache_mod.RadixPrefixCache.insert_chain_multi
+
+    def spy(self, placements, tokens):
+        inserted.append([inst for inst, _ in placements])
+        return orig(self, placements, tokens)
+
+    prefixcache_mod.RadixPrefixCache.insert_chain_multi = spy
+    try:
+        for gp in (False, True):
+            inserted.clear()
+            cl, _ = _run(params, cfg, [prompt], 8, global_pool=gp,
+                         prefix_cache=True)
+            assert inserted, "spanning request never reached the cache"
+            assert len(set(inserted[0])) >= 2, \
+                "chain was not multi-creditor"
+            r1 = Request(prompt=prompt,
+                         sampling=SamplingParams(max_new_tokens=8))
+            cl.submit(r1)
+            cl.run_until_done(max_steps=300)
+            assert r1.done
+            hits = sum(e.stats.cache_hit_tokens
+                       for e in cl.engines.values())
+            assert hits > 0, f"no warm hit (global_pool={gp})"
+    finally:
+        prefixcache_mod.RadixPrefixCache.insert_chain_multi = orig
+
+
+@pytest.mark.slow
+def test_global_pool_shard_map_matches_single_device():
+    """Mesh path (8 fake CPU devices, subprocess): shard_map global
+    pool == per-instance cluster == dense oracle, dense + moe, 2 and 4
+    ranks, with mid-stream moves (remote DMA under GSPMD)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tests", "helpers",
+                                      "global_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL OK" in r.stdout
