@@ -16,8 +16,9 @@ import traceback
 
 from benchmarks import (bench_context_length, bench_debtor_creditor,
                         bench_distattn_methods, bench_e2e_traces,
-                        bench_kv_movement, bench_prefix_cache,
-                        bench_sharded_pool, bench_ship_query_vs_kv)
+                        bench_kv_movement, bench_overload,
+                        bench_prefix_cache, bench_sharded_pool,
+                        bench_ship_query_vs_kv)
 from benchmarks.benchjson import REPO_ROOT, collect_bench_jsons, git_sha
 
 BENCHES = [
@@ -29,6 +30,7 @@ BENCHES = [
     ("fig12_kv_movement", bench_kv_movement.main),
     ("issue6_prefix_cache", bench_prefix_cache.main),
     ("issue7_sharded_pool", bench_sharded_pool.main),
+    ("issue8_overload", bench_overload.main),
 ]
 
 

@@ -150,6 +150,84 @@ def multitenant_arrivals(reqs: List[TenantRequest], vocab_size: int, *,
     return arrivals, reused
 
 
+# --- overload traces (bursty / diurnal arrival processes) --------------- #
+def gen_bursty_trace(n: int, base_rate: float, *, burst_factor: float = 6.0,
+                     burst_p: float = 0.15, mean_dwell: int = 8,
+                     prompt_len: int = 12, output_len: int = 8,
+                     seed: int = 0) -> List[TraceRequest]:
+    """Markov-modulated (MMPP) arrival stream for overload evaluation.
+
+    A two-state Markov chain modulates the Poisson rate: the CALM state
+    emits at ``base_rate`` req/s, the BURST state at ``base_rate *
+    burst_factor``; each arrival flips the state with the hazard implied
+    by ``burst_p`` (long-run burst fraction) and ``mean_dwell``
+    (arrivals per state visit). Sustained-overload evaluation drives
+    this at a rate the cluster cannot absorb, so survival — not raw
+    throughput — is what differentiates schedulers. Lengths are fixed
+    (``prompt_len``/``output_len``) so capacity pressure comes purely
+    from the arrival process."""
+    rng = np.random.default_rng(seed * 7919 + 101)
+    # Dwell hazards from the stationary split: leave each state after a
+    # geometric number of arrivals with the given mean dwell.
+    p_leave_calm = burst_p / max(1e-9, (1 - burst_p)) / mean_dwell
+    p_leave_burst = 1.0 / mean_dwell
+    t, state, out = 0.0, 0, []
+    for _ in range(n):
+        rate = base_rate * (burst_factor if state else 1.0)
+        t += rng.exponential(1.0 / rate)
+        out.append(TraceRequest(t, prompt_len, output_len))
+        if rng.random() < (p_leave_burst if state else p_leave_calm):
+            state = 1 - state
+    return out
+
+
+def gen_diurnal_trace(n: int, base_rate: float, *, peak_factor: float = 4.0,
+                      period_s: float = 60.0, prompt_len: int = 12,
+                      output_len: int = 8, seed: int = 0
+                      ) -> List[TraceRequest]:
+    """Sinusoidal (diurnal) arrival stream: the rate swings between
+    ``base_rate`` and ``base_rate * peak_factor`` over ``period_s``
+    (a compressed day). Generated by thinning a Poisson stream at the
+    peak rate, so inter-arrival statistics are exact."""
+    rng = np.random.default_rng(seed * 7919 + 211)
+    peak = base_rate * peak_factor
+    t, out = 0.0, []
+    while len(out) < n:
+        t += rng.exponential(1.0 / peak)
+        phase = 0.5 - 0.5 * np.cos(2 * np.pi * t / period_s)
+        rate = base_rate + (peak - base_rate) * phase
+        if rng.random() < rate / peak:       # thinning acceptance
+            out.append(TraceRequest(t, prompt_len, output_len))
+    return out
+
+
+def overload_arrivals(reqs: List[TraceRequest], vocab_size: int, *,
+                      deadline_p: float = 0.5, deadline_s: float = 2.0,
+                      priority: int = 1, seed: int = 0,
+                      time_scale: float = 1.0):
+    """Materialize an overload trace as SLO-carrying ``Arrival``s.
+
+    A ``deadline_p`` fraction of arrivals are latency-critical: they
+    carry ``deadline_s`` (seconds after arrival) and ``priority``; the
+    rest are best-effort (no deadline, priority 0) — the victims the
+    SLO-aware preemptor is expected to pause first. Returns
+    ``(arrivals, critical_flags)``."""
+    from repro.serving import Arrival, SamplingParams
+    rng = np.random.default_rng(seed * 31 + 3)
+    arrivals, critical = [], []
+    for r in reqs:
+        crit = bool(rng.random() < deadline_p)
+        arrivals.append(Arrival(
+            at=r.arrival * time_scale,
+            prompt=rng.integers(0, vocab_size,
+                                size=r.prompt_len).tolist(),
+            sampling=SamplingParams(max_new_tokens=r.output_len),
+            priority=priority if crit else 0,
+            deadline_s=deadline_s if crit else None))
+        critical.append(crit)
+    return arrivals, critical
+
+
 def to_arrivals(reqs: List[TraceRequest], vocab_size: int, seed: int = 0,
                 prompt_scale: float = 1.0, max_prompt: int = 10 ** 9,
                 max_output: int = 10 ** 9, time_scale: float = 1.0):

@@ -48,6 +48,32 @@ back (H2D through the stager) — ``server.metrics`` surfaces occupancy,
 hit tokens, and spill/prefetch bytes; ``bench_prefix_cache`` gates warm
 TTFT >= 2x cold and prefetch stalls <= 0.1 in CI.
 
+Overload survival (opt-in)
+--------------------------
+``ServingConfig(overload=OverloadPolicy(enabled=True))`` lets the
+frontend PAUSE running requests instead of making deadline-urgent
+arrivals wait out the queue:
+
+    ServingConfig.smoke(overload=OverloadPolicy(enabled=True))
+
+When the admission queue backs up with work more urgent than what is
+running, the ``Preemptor`` ranks victims by SLO slack (deadline minus
+the perf model's predicted finish, charged the spill+resume round trip
+— no-deadline best-effort requests rank first), pauses the chosen
+victim at a step boundary, and spills its KV chain byte-for-byte to a
+dedicated pinned host tier; creditor spans are released exactly once
+and a mid-prefill pause reuses the cancel path's exact rollback but
+re-queues the request. Resume restores the frames through the paged
+admission path — no re-prefill — so a resumed request's greedy tokens
+are identical to an unpreempted run (CI-gated as
+``preempt_token_identity``; ``bench_overload`` also gates >= 1.3x
+deadline goodput over the queue-only baseline at 2x overload). The
+``ArrivalEstimator`` EWMA replaces the static ``avg_new_req_len`` knob
+in Algorithm-1 planning while the server runs. ``server.metrics``
+surfaces ``preemptions`` / ``preempt_resumes`` / ``paused_now`` /
+``arrival_rate_hz``; knobs live on ``OverloadPolicy`` (see
+``docs/ARCHITECTURE.md`` for the full reference).
+
 Mesh-sharded global KV pool (opt-in)
 ------------------------------------
 ``ServingConfig(global_pool=True)`` folds the per-instance pool tensors
@@ -85,12 +111,13 @@ tables) plus a ``GManager`` running the paper's Algorithm 1 via
 batch-mode pattern — new code should go through ``LLMServer``.
 """
 from repro.serving.cluster import Cluster
-from repro.serving.config import ServingConfig
+from repro.serving.config import OverloadPolicy, ServingConfig
 from repro.serving.engine import InstanceEngine
 from repro.serving.gmanager import GManager
 from repro.serving.globalpool import GlobalKVPool
 from repro.serving.hosttier import HostKVTier
 from repro.serving.kvpool import BlockAllocator, RankKVPool
+from repro.serving.preempt import Preemptor, PreemptStats
 from repro.serving.prefixcache import RadixPrefixCache
 from repro.serving.perfmodel import InstancePerfModel, cluster_tps
 from repro.serving.request import (Request, RequestIdAllocator,
@@ -102,6 +129,7 @@ from repro.serving.server import Arrival, LLMServer, RequestHandle
 
 __all__ = [
     "LLMServer", "RequestHandle", "Arrival", "ServingConfig",
+    "OverloadPolicy", "Preemptor", "PreemptStats",
     "Cluster", "InstanceEngine", "GManager", "BlockAllocator", "RankKVPool",
     "InstancePerfModel", "cluster_tps", "Request", "RequestIdAllocator",
     "RequestState", "SamplingParams", "RManager", "GreedyScheduler",

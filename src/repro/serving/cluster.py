@@ -177,6 +177,15 @@ class PrefixSink:
 
 
 class Cluster:
+    """N ``InstanceEngine``s + one ``GManager`` driven in lock-step.
+
+    Owns the shared ``AsyncStager`` (all KV movement), the optional
+    ``GlobalKVPool``/host tier/prefix cache, and — when
+    ``config.overload.enabled`` — the ``Preemptor``. ``step()`` is the
+    cluster heartbeat: resume paused requests, step every live engine,
+    run the Algorithm-1 plan round, execute moves, drain releases.
+    """
+
     def __init__(self, params, cfg: ModelConfig,
                  config: Optional[ServingConfig] = None, *,
                  perf: Optional[InstancePerfModel] = None,
@@ -247,7 +256,14 @@ class Cluster:
                                  mem_util_thres=config.mem_util_thres,
                                  avg_new_req_len=config.avg_new_req_len,
                                  max_stripes=config.max_stripes,
-                                 reclaim_horizon_s=config.reclaim_horizon_s)
+                                 reclaim_horizon_s=config.reclaim_horizon_s,
+                                 arrival_alpha=config.overload.arrival_alpha)
+        # Overload survival (opt-in): pause/host-spill preemption with
+        # its own pinned host tier, driven by the serving frontend.
+        self.preemptor = None
+        if config.overload.enabled:
+            from repro.serving.preempt import Preemptor
+            self.preemptor = Preemptor(self, config.overload)
         self.requests: Dict[int, Request] = {}
         self._step_count = 0
         self._dead: set = set()
@@ -259,6 +275,8 @@ class Cluster:
 
     # ----------------------------------------------------------------- #
     def submit(self, req: Request, now: Optional[float] = None) -> None:
+        """Register ``req`` and enqueue it on the instance Algorithm 1
+        picks (least-loaded engine before any heartbeat exists)."""
         if req.req_id not in self.requests and req.arrival_time == 0.0:
             req.arrival_time = time.monotonic() if now is None else now
         self.requests[req.req_id] = req
@@ -269,6 +287,18 @@ class Cluster:
                     if i not in self._dead]
             inst = min(live, key=lambda e: e.batch_size).inst_id
         self.engines[inst].submit(req)
+
+    def submit_to(self, req: Request, inst_id: int,
+                  now: Optional[float] = None) -> None:
+        """Targeted ``submit``: enqueue on a SPECIFIC live instance —
+        the preemption path pairs a paused victim's freed slot with the
+        urgent request it was freed for, bypassing the most-free-memory
+        placement query."""
+        if req.req_id not in self.requests and req.arrival_time == 0.0:
+            req.arrival_time = time.monotonic() if now is None else now
+        self.requests[req.req_id] = req
+        assert inst_id in self.engines and inst_id not in self._dead
+        self.engines[inst_id].submit(req)
 
     def cancel(self, req_id: int) -> bool:
         """Cancel a request anywhere in its lifecycle.
@@ -287,6 +317,11 @@ class Cluster:
         if req is None or req.done:
             return False
         req.cancelled = True
+        # A PAUSED request lives in no engine — its device state was
+        # already released at pause; retire it from the preempt tier.
+        if self.preemptor is not None and \
+                self.preemptor.cancel_paused(req_id):
+            return True
         for i, eng in self.engines.items():
             if i in self._dead:
                 continue
@@ -327,9 +362,19 @@ class Cluster:
         owner's chunk loop writes through — or None when the cluster is
         out of pooled memory, with every partial reservation rolled
         back and zero compute spent. Creditors count their unpinned
-        prefix-cache replicas as capacity (try_move evicts on demand)."""
-        def sink(req: Request, n_tokens: int,
-                 start: int = 0) -> Optional[PrefixSink]:
+        prefix-cache replicas as capacity (try_move evicts on demand).
+
+        ``prefer`` (``[(inst_id, n_blocks)]``, chain order) asks the
+        sink to reproduce a specific span layout before falling back to
+        the generic creditor picker — preemption resume passes the
+        paused chain's layout so the restored request keeps its exact
+        LSE-merge partition. Entries naming dead instances or the owner
+        itself are skipped (their blocks fall through to the generic
+        picker), so ``prefer`` is best-effort and never blocks a
+        resume that generic placement could satisfy."""
+        def sink(req: Request, n_tokens: int, start: int = 0,
+                 prefer: Optional[List[Tuple[int, int]]] = None,
+                 ) -> Optional[PrefixSink]:
             bs = self.block_size
             spans: List[Tuple[int, int, List[int]]] = []
 
@@ -337,22 +382,36 @@ class Cluster:
                 for d, _, _ in spans:
                     self.engines[d].drop_hosted(req.req_id)
 
+            def take(dst: int, nb: int, off: int) -> int:
+                """Reserve up to ``nb`` blocks on ``dst``; 0 on refusal."""
+                eng = self.engines[dst]
+                nb = min(nb, eng.rmanager.effective_free)
+                if nb <= 0 or not eng.rmanager.try_move_kvcache(
+                        req.req_id, nb):
+                    return 0
+                blocks = eng.rmanager.commit_move_in(req.req_id, nb,
+                                                     at_front=False)
+                spans.append((dst, start + off, blocks))
+                return nb
+
             off = 0
+            for dst, nb in (prefer or []):
+                if off >= n_tokens:
+                    break
+                if dst == src_id or dst in self._dead \
+                        or dst not in self.engines:
+                    continue
+                nb = min(nb, (n_tokens - off) // bs)
+                off += take(dst, nb, off) * bs
             while off < n_tokens:
                 dst = self._pick_creditor(exclude=src_id)
                 if dst is None:
                     rollback()
                     return None
-                eng = self.engines[dst]
-                nb = min(eng.rmanager.effective_free,
-                         (n_tokens - off) // bs)
-                if nb <= 0 or not eng.rmanager.try_move_kvcache(req.req_id,
-                                                                nb):
+                nb = take(dst, (n_tokens - off) // bs, off)
+                if nb <= 0:
                     rollback()
                     return None
-                blocks = eng.rmanager.commit_move_in(req.req_id, nb,
-                                                     at_front=False)
-                spans.append((dst, start + off, blocks))
                 off += nb * bs
             return PrefixSink(self, req.req_id, spans)
         return sink
@@ -624,11 +683,22 @@ class Cluster:
             for mv in self.gmanager.plan_moves(urgency=urgency):
                 self._execute_move(mv)
 
+        # Resume parked (preempted) requests before the decode sweep so
+        # a freed slot carries tokens this very step; the preemptor's
+        # guards keep it from stealing capacity the waiting queue (or a
+        # more urgent arrival) is entitled to.
+        if self.preemptor is not None:
+            self.preemptor.maybe_resume(now=now)
+
         made = 0
         for i, eng in self.engines.items():
             if i in self._dead:
                 continue
             made += eng.step()
+        if self.preemptor is not None:
+            # Preempt-tier D2H spills finalize behind decode like the
+            # shared tier's.
+            self.preemptor.tier.drain(block=False)
         if self.host_tier is not None:
             # Finalize whichever D2H spills have landed — behind the
             # decode compute just dispatched, never blocking on it.
@@ -639,6 +709,15 @@ class Cluster:
             if i not in self._dead:
                 self._pending_release.update(eng.drain_finished())
         for rid in self._pending_release:
+            req = self.requests.get(rid)
+            if req is not None and not req.done:
+                # A pause queues a finished event after dropping the
+                # chain's hosted spans itself. If the request resumed
+                # within this same step, is_hosting is true again for
+                # its FRESH creditor spans — releasing those here would
+                # silently shrink the resumed chain. Live requests keep
+                # their spans; terminal ones release as usual.
+                continue
             for eng in self.engines.values():
                 if eng.rmanager.is_hosting(rid):
                     eng.drop_hosted(rid)
@@ -647,6 +726,7 @@ class Cluster:
 
     # ----------------------------------------------------------------- #
     def run_until_done(self, max_steps: int = 10_000) -> int:
+        """Step until every registered request is done; returns steps."""
         steps = 0
         while steps < max_steps and any(not r.done
                                         for r in self.requests.values()):
@@ -656,6 +736,7 @@ class Cluster:
 
     @property
     def throughput_stats(self) -> Dict[str, float]:
+        """Cluster-wide KV-moved / query-shipped byte counters."""
         total_kv = sum(e.stats.kv_moved for e in self.engines.values())
         total_q = sum(e.stats.query_shipped for e in self.engines.values())
         return {"kv_moved_bytes": total_kv, "query_shipped_bytes": total_q}

@@ -26,6 +26,41 @@ from dataclasses import dataclass
 
 
 @dataclass(frozen=True)
+class OverloadPolicy:
+    """Overload-survival knobs: preemptive pause/host-spill scheduling.
+
+    Off by default (``enabled=False``) the server behaves exactly as
+    before: admission queues or rejects, running requests are never
+    disturbed. Enabled, the frontend may PAUSE running requests at a
+    step boundary — spilling their KV chain byte-for-byte to a
+    dedicated pinned host-DRAM tier — to free slots/blocks for
+    deadline-urgent arrivals, and resumes them later with identical
+    tokens. Victim choice is SLO-aware: slack = deadline - predicted
+    finish (perf model), charged the spill+resume round-trip via
+    ``t_host_transfer``. Frozen like ``ServingConfig``; derive variants
+    with ``dataclasses.replace``.
+    """
+
+    enabled: bool = False          # master switch for preemption
+    preempt_host_blocks: int = 512  # host frames reserved for paused KV
+    max_preemptions: int = 2       # per-request pause cap (anti-thrash)
+    min_pause_s: float = 0.0       # min parked time before resume
+    victim_min_slack_s: float = 0.5  # victim must keep this much slack
+    #                                 AFTER paying the spill+resume cost
+    arrival_alpha: float = 0.3     # EWMA weight of the arrival estimator
+
+    def __post_init__(self):
+        if not 0.0 < self.arrival_alpha <= 1.0:
+            raise ValueError("arrival_alpha must be in (0, 1]")
+        if self.enabled and self.preempt_host_blocks <= 0:
+            raise ValueError(
+                "preemption requires preempt_host_blocks > 0 (paused KV "
+                "lives in the dedicated host tier)")
+        if self.max_preemptions < 0 or self.min_pause_s < 0:
+            raise ValueError("max_preemptions/min_pause_s must be >= 0")
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     """All serving knobs. Frozen: derive variants via ``replace()``."""
 
@@ -63,6 +98,8 @@ class ServingConfig:
     # --- frontend (LLMServer) ----------------------------------------- #
     max_waiting: int = 256         # admission-queue bound (backpressure)
     admission_policy: str = "queue"  # "queue" | "reject" when bounded out
+    # --- overload survival (preemption) -------------------------------- #
+    overload: OverloadPolicy = OverloadPolicy()  # pause/spill/resume knobs
 
     def __post_init__(self):
         if self.admission_policy not in ("queue", "reject"):
@@ -81,9 +118,11 @@ class ServingConfig:
 
     @property
     def beta_threshold(self) -> int:
+        """Algorithm-1 debtor batch threshold (defaults to max_batch)."""
         return self.max_batch if self.beta_thres is None else self.beta_thres
 
     def replace(self, **overrides) -> "ServingConfig":
+        """Derive a variant config (frozen dataclass ``replace``)."""
         return dataclasses.replace(self, **overrides)
 
     # --- presets ------------------------------------------------------ #

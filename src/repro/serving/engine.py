@@ -157,6 +157,11 @@ def _sample_batch_topk(key, logits, temps, top_ks):
 # (distinct from None, which means cluster-wide OOM).
 _CANCELLED = object()
 
+# Sentinel return of a streaming admission aborted by a cooperative
+# pause request (overload preemption): same exact rollback as a cancel,
+# but the request survives and returns to the waiting queue.
+_PAUSED = object()
+
 
 class InstanceEngine:
     """One serving instance (model replica)."""
@@ -237,10 +242,12 @@ class InstanceEngine:
     # private per-instance tensors, or the one global tensor.
     @property
     def pool_k(self):
+        """Key pool tensor (private, or the global pool's alias)."""
         return self._pool_k if self.gpool is None else self.gpool.k
 
     @pool_k.setter
     def pool_k(self, val):
+        """Rebind the key pool (donated-buffer round trips)."""
         if self.gpool is None:
             self._pool_k = val
         else:
@@ -248,10 +255,12 @@ class InstanceEngine:
 
     @property
     def pool_v(self):
+        """Value pool tensor (private, or the global pool's alias)."""
         return self._pool_v if self.gpool is None else self.gpool.v
 
     @pool_v.setter
     def pool_v(self, val):
+        """Rebind the value pool (donated-buffer round trips)."""
         if self.gpool is None:
             self._pool_v = val
         else:
@@ -259,15 +268,18 @@ class InstanceEngine:
 
     # ----------------------------------------------------------------- #
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` on this instance's waiting list."""
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
     @property
     def running(self) -> List[Request]:
+        """Requests currently occupying decode slots."""
         return [r for r in self.slots if r is not None]
 
     @property
     def batch_size(self) -> int:
+        """Number of occupied decode slots."""
         return len(self.running)
 
     def _free_slot(self) -> Optional[int]:
@@ -323,6 +335,18 @@ class InstanceEngine:
             if logits is _CANCELLED:             # aborted mid-prefill
                 self._cancel_finalize(req)
                 return True
+            if logits is _PAUSED:
+                # Paused mid-prefill: the admission rolled back exactly;
+                # the request returns to the head of the queue and is
+                # re-admitted (re-prefilled) on a later step. Returning
+                # False ends this step's admission sweep — the freed
+                # capacity is the point of the pause.
+                req.pause_requested = False
+                req.preemptions += 1
+                req.paused_at = time.monotonic()
+                req.state = RequestState.WAITING
+                self.waiting.insert(0, req)
+                return False
         else:
             logits = self._admit_dense(req, slot, T, n_local)
         self.rmanager.set_owner(req.req_id, True)
@@ -472,15 +496,19 @@ class InstanceEngine:
         logits = self._stream_prefill(req, n_over, n_local, sink,
                                       n_cached=n_cached,
                                       write_from=write_from)
-        if logits is _CANCELLED:
+        if logits is _CANCELLED or logits is _PAUSED:
             # Abort the in-flight admission: drain staged creditor
             # writes, drop the committed spans (metadata release — the
             # all-or-nothing machinery's rollback), free local blocks.
-            # Cache pins are released in _release_slot, exactly once.
+            # Cache pins are released in _release_slot, exactly once —
+            # except on a PAUSE, which never reaches a terminal path,
+            # so its pins are released here.
             if sink is not None:
                 sink.abort()
             self.rmanager.release_request(rid)
-            return _CANCELLED
+            if logits is _PAUSED and cache is not None:
+                cache.release(rid)
+            return logits
         if sink is not None:
             self.remote_insts[rid] = list(sink.rank_ids)
             L, K, hd = (self.cfg.num_layers, self.cfg.num_kv_heads,
@@ -535,10 +563,11 @@ class InstanceEngine:
         cred_end = n_cached + n_over     # first locally-written token
         logits = None
         for t0 in range(n_cached, T, C):
-            if req.cancelled:
+            if req.cancelled or req.pause_requested:
                 # Cooperative abort point: between chunks, before any
-                # more compute or creditor writes are dispatched.
-                return _CANCELLED
+                # more compute or creditor writes are dispatched. A
+                # pause rolls back identically but keeps the request.
+                return _CANCELLED if req.cancelled else _PAUSED
             t1 = min(t0 + C, T)
             n_valid = t1 - t0
             toks = np.zeros(C, np.int32)
@@ -610,8 +639,8 @@ class InstanceEngine:
         cred_end = n_cached + n_over     # first locally-written token
         logits = None
         for t0 in range(n_cached, T, C):
-            if req.cancelled:
-                return _CANCELLED
+            if req.cancelled or req.pause_requested:
+                return _CANCELLED if req.cancelled else _PAUSED
             t1 = min(t0 + C, T)
             n_valid = t1 - t0
             toks = np.zeros(C, np.int32)
@@ -962,6 +991,7 @@ class InstanceEngine:
 
     # --- KV movement (debtor side) ------------------------------------ #
     def local_tokens(self, req: Request) -> int:
+        """Tokens of ``req`` resident in THIS instance's pool."""
         return self.rmanager.pool.tokens_of(req.req_id)
 
     def local_free_tokens(self, req: Request) -> int:
@@ -1035,3 +1065,134 @@ class InstanceEngine:
     def drop_hosted(self, req_id: int) -> None:
         """Release a hosted span — pure metadata; rows are reused later."""
         self.rmanager.release_request(req_id)
+
+    # --- preemption (overload survival) -------------------------------- #
+    def chain_of(self, req: Request) -> List[Tuple[int, int]]:
+        """The request's GLOBAL block chain in token order: the striped
+        ``req_chain`` when it spans creditors (or was moved), else its
+        purely local block list."""
+        chain = self.req_chain.get(req.req_id)
+        if chain is not None:
+            return chain
+        rb = self.rmanager.pool.requests.get(req.req_id)
+        return [(self.inst_id, b) for b in rb.blocks] if rb else []
+
+    def read_chain_frames(self, req: Request):
+        """Gather every block of a request's KV chain (cross-engine for
+        creditor spans) as independent ``(k, v)`` frame pairs of shape
+        [L, bs, K, hd], in token order.
+
+        Returns ``(n_resident_tokens, frames)`` or None when the chain
+        is unreadable (unknown request, dead creditor). The gathers do
+        not alias the pools, so the caller may release the blocks right
+        after — JAX's functional dependencies order the reads before
+        any later reuse of the frames."""
+        rid = req.req_id
+        rb = self.rmanager.pool.requests.get(rid)
+        if rb is None or not rb.blocks:
+            return None
+        chain = self.chain_of(req)
+        if not chain:
+            return None
+        frames = []
+        for inst, blk in chain:
+            eng = self if inst == self.inst_id else self.peers.get(inst)
+            if eng is None:
+                return None
+            frames.append(eng.read_block_rows(blk))
+        n_tokens = (len(chain) - 1) * self.block_size + rb.tail_tokens
+        return n_tokens, frames
+
+    def finalize_pause(self, req: Request,
+                       now: Optional[float] = None) -> None:
+        """Release a RUNNING request's device state and park it PAUSED.
+
+        Called by the preemptor AFTER its KV chain has been read and
+        stored host-side: the slot, local blocks (decref'ing shared
+        cache frames) and cache pins are released through the same
+        ``_release_slot`` discipline as every terminal path — the
+        finished event it queues lets the cluster drop any creditor
+        span not already dropped, exactly once. The request itself
+        keeps its prompt/output/stream state and is NOT terminal."""
+        req.state = RequestState.PAUSED
+        req.preemptions += 1
+        req.paused_at = time.monotonic() if now is None else now
+        self._release_slot(req)
+
+    def resume_paused(self, req: Request, n_tokens: int,
+                      frames, remote_layout=None) -> bool:
+        """Re-admit a PAUSED request by restoring its KV chain, without
+        recompute.
+
+        Reserves a fresh placement — a local tail (plus one block of
+        decode headroom) and, when ``n_tokens`` overflows the local
+        quota, block-aligned creditor spans committed through the
+        reserve-then-stream prefix sink. When ``remote_layout`` (the
+        paused chain's creditor runs as ``[(inst_id, n_blocks)]``) is
+        given, the SAME local/remote partition — and preferentially the
+        same creditors — is reproduced instead of recomputing the split
+        from admission's quota math: the partition decides the
+        LSE-merge grouping, so reproducing it keeps the resumed greedy
+        stream bit-identical to the unpreempted run rather than merely
+        byte-identical in KV. The saved ``frames`` (chain order) are
+        uploaded H2D into the reserved blocks: creditor spans first
+        (tokens [0, n_over)), local tail after. Rollback is exact on
+        any reservation failure (sink abort + block release), leaving
+        the request PAUSED and resumable elsewhere. On success the
+        request is RUNNING in a slot and the next decode step feeds
+        ``output[-1]`` over byte-identical KV."""
+        if not self._can_pool:
+            return False
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        rid, bs = req.req_id, self.block_size
+        if remote_layout:
+            n_over = sum(nb for _, nb in remote_layout) * bs
+        else:
+            cap = self.max_local_len - bs
+            n_over = 0 if n_tokens <= cap \
+                else -(-(n_tokens - cap) // bs) * bs
+        n_local = n_tokens - n_over
+        if n_over and self.prefix_sink is None:
+            return False
+        sink = None
+        if n_over:
+            sink = self.prefix_sink(req, n_over, start=0,
+                                    prefer=remote_layout)
+            if sink is None:
+                return False
+        if not self._ensure_free(-(-n_local // bs)) or \
+                not self.rmanager.pool.append_tokens(rid, n_local):
+            if sink is not None:
+                sink.abort()
+            self.rmanager.release_request(rid)
+            return False
+        idx = 0
+        if sink is not None:
+            for inst, _start, blks in sink.spans:
+                eng = self.peers[inst]
+                for b in blks:
+                    k, v = frames[idx]
+                    idx += 1
+                    eng.write_block_rows(b, k, v)
+            sink.flush()
+            self.remote_insts[rid] = list(sink.rank_ids)
+        local = self.rmanager.pool.requests[rid].blocks
+        for b in local:
+            k, v = frames[idx]
+            idx += 1
+            self.write_block_rows(b, k, v)
+            self.stats.host_prefetch_bytes += int(
+                k.size * k.dtype.itemsize + v.size * v.dtype.itemsize)
+        assert idx == len(frames), "chain frames != reserved blocks"
+        if sink is not None:
+            chain = [(inst, b) for inst, _start, blks in sink.spans
+                     for b in blks]
+            chain += [(self.inst_id, b) for b in local]
+            self.req_chain[rid] = chain
+        self.rmanager.set_owner(rid, True)
+        req.slot = slot
+        req.state = RequestState.RUNNING
+        self.slots[slot] = req
+        return True

@@ -28,6 +28,53 @@ from repro.serving.protocol import (Heartbeat, MoveKVCache, MoveLeg,
 from repro.serving.scheduler import GreedyScheduler, InstanceView
 
 
+class ArrivalEstimator:
+    """EWMA estimator of the live arrival stream (paper §6.2's online
+    "average length of new requests", generalized with a rate term).
+
+    ``observe(now, n_tokens)`` folds one arrival in: ``n_tokens`` is
+    the request's expected KV footprint (prompt + max_new_tokens — the
+    worst case the pool must plan for) and ``now`` feeds an EWMA of the
+    inter-arrival gap. The length estimate starts at the static
+    ``avg_new_req_len`` config prior and converges to the traffic; the
+    rate is 0 ("unknown") until two arrivals have been seen. The
+    gManager pushes both into ``GreedyScheduler`` before each planning
+    round, replacing the static knob in Algorithm 1's batch-growth
+    credit."""
+
+    def __init__(self, alpha: float = 0.3, init_len: int = 512):
+        assert 0.0 < alpha <= 1.0
+        self.alpha = alpha
+        self._avg_len = float(init_len)
+        self._avg_gap: Optional[float] = None
+        self._last_t: Optional[float] = None
+        self.samples = 0
+
+    def observe(self, now: float, n_tokens: int) -> None:
+        """Fold one arrival (at monotonic ``now``, ``n_tokens`` of
+        expected KV footprint) into the EWMA state."""
+        a = self.alpha
+        self._avg_len += a * (float(n_tokens) - self._avg_len)
+        if self._last_t is not None:
+            gap = max(1e-6, now - self._last_t)
+            self._avg_gap = gap if self._avg_gap is None else \
+                self._avg_gap + a * (gap - self._avg_gap)
+        self._last_t = now
+        self.samples += 1
+
+    @property
+    def avg_new_req_len(self) -> int:
+        """Current length estimate (tokens), floored at one."""
+        return max(1, int(round(self._avg_len)))
+
+    @property
+    def rate_hz(self) -> float:
+        """EWMA arrival rate in req/s (0.0 until two arrivals seen)."""
+        if self._avg_gap is None:
+            return 0.0
+        return 1.0 / self._avg_gap
+
+
 @dataclass
 class _InstanceStatus:
     inst_id: int
@@ -43,11 +90,18 @@ class _InstanceStatus:
 
 
 class GManager:
+    """Centralized planner: heartbeat map + Algorithm 1 + placement.
+
+    Owns the ``GreedyScheduler`` (and feeds it the live
+    ``ArrivalEstimator`` state before every planning round), detects
+    dead instances, and answers placement queries for new arrivals."""
+
     def __init__(self, perf: InstancePerfModel, block_size: int,
                  heartbeat_timeout: float = 3.0,
                  beta_thres: int = 64, mem_util_thres: float = 0.8,
                  avg_new_req_len: int = 512, max_stripes: int = 8,
-                 reclaim_horizon_s: float = 1.0):
+                 reclaim_horizon_s: float = 1.0,
+                 arrival_alpha: float = 0.3):
         self.scheduler = GreedyScheduler(perf, block_size,
                                          beta_thres=beta_thres,
                                          mem_util_thres=mem_util_thres,
@@ -58,6 +112,16 @@ class GManager:
         self.timeout = heartbeat_timeout
         self.instances: Dict[int, _InstanceStatus] = {}
         self.bootstrapping = True     # new gManager needs full heartbeats
+        self.arrivals = ArrivalEstimator(alpha=arrival_alpha,
+                                         init_len=avg_new_req_len)
+
+    # --- arrival stream ------------------------------------------------ #
+    def observe_arrival(self, now: float, n_tokens: int) -> None:
+        """Feed one frontend arrival (expected KV footprint in tokens)
+        into the EWMA estimator; the next ``plan_moves`` round plans
+        with the updated ``avg_new_req_len``/rate instead of the static
+        config knob."""
+        self.arrivals.observe(now, n_tokens)
 
     # --- heartbeat ingestion ------------------------------------------ #
     def on_heartbeat(self, hb: Heartbeat, now: Optional[float] = None
@@ -100,13 +164,16 @@ class GManager:
         return dead
 
     def deregister(self, inst_id: int) -> None:
+        """Forget a (dead or drained) instance entirely."""
         self.instances.pop(inst_id, None)
 
     def requests_touching(self, inst_id: int) -> List[int]:
+        """Request ids with any KV (local or hosted) on ``inst_id``."""
         st = self.instances.get(inst_id)
         return sorted(st.entries) if st else []
 
     def owner_of(self, req_id: int) -> Optional[int]:
+        """Instance id owning ``req_id``'s local span, if any."""
         for st in self.instances.values():
             e = st.entries.get(req_id)
             if e is not None and e.local:
@@ -157,6 +224,12 @@ class GManager:
         priority/deadline lifecycle) biases the planner: higher-urgency
         requests are picked for memory relief first.
         """
+        # Push the live arrival estimate into Algorithm 1: the
+        # batch-growth credit plans with observed traffic, not the
+        # static config prior.
+        if self.arrivals.samples > 0:
+            self.scheduler.avg_new_len = self.arrivals.avg_new_req_len
+        self.scheduler.arrival_rate_hz = self.arrivals.rate_hz
         moves = self.scheduler.plan(self._views(), urgency=urgency)
         return [MoveKVCache(m.req_id, m.src,
                             [MoveLeg(leg.dst, leg.num_blocks)

@@ -40,6 +40,8 @@ import numpy as np
 
 @dataclass
 class HostTierStats:
+    """Counters for tier traffic, stalls, and eviction pressure."""
+
     spilled_bytes: int = 0       # D2H bytes accepted by put()
     fetched_bytes: int = 0       # H2D bytes handed out by get()
     spills: int = 0
@@ -81,10 +83,28 @@ class HostKVTier:
     # ----------------------------------------------------------------- #
     @property
     def used_blocks(self) -> int:
+        """Frames resident or in flight (both count against capacity)."""
         return len(self._frames) + len(self._pending)
+
+    @property
+    def free_blocks(self) -> int:
+        """Capacity headroom without evicting anything."""
+        return max(0, self.capacity - self.used_blocks)
 
     def __contains__(self, key: Any) -> bool:
         return key in self._frames or key in self._pending
+
+    def pin(self, key: Any) -> None:
+        """Exempt ``key`` from LRU eviction until ``unpin``/``drop``.
+
+        The preemptor pins every frame of a paused request's KV chain:
+        a paused request must ALWAYS be resumable byte-identically, so
+        its frames can never be sacrificed to watermark pressure."""
+        self.pinned.add(key)
+
+    def unpin(self, key: Any) -> None:
+        """Make ``key`` LRU-evictable again (no-op if not pinned)."""
+        self.pinned.discard(key)
 
     def _touch(self, key: Any) -> None:
         self._clock += 1
@@ -166,6 +186,7 @@ class HostKVTier:
         return frame
 
     def drop(self, key: Any) -> None:
+        """Forget ``key`` entirely (pending or resident; idempotent)."""
         self._pending.pop(key, None)
         self._frames.pop(key, None)
         self._tick.pop(key, None)

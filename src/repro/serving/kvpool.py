@@ -62,13 +62,16 @@ class BlockAllocator:
 
     @property
     def free_count(self) -> int:
+        """Allocatable blocks (free list minus move reservations)."""
         return len(self._free) - self.reserved
 
     @property
     def used_count(self) -> int:
+        """Blocks currently owned by some request/cache."""
         return self.num_blocks - len(self._free)
 
     def alloc(self, n: int, req_id: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks for ``req_id`` (None if short)."""
         if n > self.free_count:
             return None
         blocks = [self._free.pop() for _ in range(n)]
@@ -85,6 +88,7 @@ class BlockAllocator:
         return True
 
     def commit_reservation(self, n: int, req_id: int) -> List[int]:
+        """Turn a prior ``reserve(n)`` into real blocks."""
         assert self.reserved >= n
         self.reserved -= n
         blocks = self.alloc(n, req_id)
@@ -92,6 +96,7 @@ class BlockAllocator:
         return blocks
 
     def cancel_reservation(self, n: int) -> None:
+        """Return reserved headroom without allocating."""
         self.reserved = max(0, self.reserved - n)
 
     def incref(self, blocks: Sequence[int]) -> None:
@@ -102,6 +107,7 @@ class BlockAllocator:
             self._ref[b] += 1
 
     def refcount(self, block: int) -> int:
+        """Live references on ``block`` (0 if unallocated)."""
         return self._ref.get(block, 0)
 
     def rebind(self, block: int, new_id: int) -> None:
@@ -125,6 +131,7 @@ class BlockAllocator:
             self._free.append(b)
 
     def blocks_of(self, req_id: int) -> List[int]:
+        """Blocks whose informational owner is ``req_id``."""
         return [b for b, r in self._owner.items() if r == req_id]
 
 
@@ -136,6 +143,7 @@ class RequestBlocks:
     tail_tokens: int = 0       # valid tokens in the LAST block (1..bs)
 
     def n_tokens(self, block_size: int) -> int:
+        """Valid tokens across this request's blocks."""
         if not self.blocks:
             return 0
         return (len(self.blocks) - 1) * block_size + self.tail_tokens
@@ -211,16 +219,19 @@ class RankKVPool:
         rb.tail_tokens = tail_tokens
 
     def release(self, req_id: int) -> None:
+        """Drop the request's block references (refcounted free)."""
         rb = self.requests.pop(req_id, None)
         if rb and rb.blocks:
             self.alloc.free(rb.blocks)
 
     def tokens_of(self, req_id: int) -> int:
+        """Valid tokens ``req_id`` holds in this pool (0 if none)."""
         rb = self.requests.get(req_id)
         return rb.n_tokens(self.block_size) if rb else 0
 
     @property
     def memory_utilization(self) -> float:
+        """Fraction of pool blocks in use (Algorithm-1 input)."""
         return self.alloc.used_count / self.alloc.num_blocks
 
 

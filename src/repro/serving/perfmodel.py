@@ -28,6 +28,14 @@ from repro.distributed.hardware import V5E, HardwareSpec
 
 @dataclass
 class InstancePerfModel:
+    """Paper Eq. 5-7 analytic step-time model for one instance.
+
+    Decomposes a decode step into non-attention compute (Eq. 5),
+    bandwidth-bound attention over resident KV, TP collectives, and the
+    debtor/creditor corrections (Eq. 6-7); the scheduler and SLO victim
+    ranking consume ``predicted_finish_s``/``t_preempt_roundtrip``.
+    """
+
     cfg: ModelConfig
     hw: HardwareSpec = V5E
     chips: int = 1                 # chips per instance (TP degree)
@@ -50,11 +58,13 @@ class InstancePerfModel:
         return peak * min(1.0, beta / self.hw.critical_intensity)
 
     def t_natn(self, beta: int) -> float:
+        """Non-attention time of one layer at batch ``beta`` (Eq. 5)."""
         if beta <= 0:
             return 0.0
         return self.w_natn(beta) / self.f_natn(beta)
 
     def kv_bytes_per_token_layer(self) -> float:
+        """KV bytes one token adds per layer (both K and V)."""
         c = self.cfg
         return 2.0 * c.num_kv_heads * c.head_dim * self.bytes_per_el
 
@@ -80,6 +90,7 @@ class InstancePerfModel:
         return bytes_ar / self.hw.ici_link_bw + latency
 
     def t_layer(self, beta: int, lengths: Sequence[int]) -> float:
+        """Undisturbed per-layer step time (Eq. 5 both terms + TP)."""
         return self.t_natn(beta) + self.t_atn(lengths) \
             + self.t_tp_comm(beta)
 
@@ -133,6 +144,33 @@ class InstancePerfModel:
         kv_bytes = n_tokens * self.kv_bytes_per_token_layer() \
             * self.cfg.num_layers
         return kv_bytes / (self.hw.host_link_bw * self.chips)
+
+    def t_preempt_roundtrip(self, n_tokens: int) -> float:
+        """Modeled cost of pausing+resuming a request with ``n_tokens``
+        of resident KV: one D2H spill plus one H2D prefetch over the
+        host link (2x ``t_host_transfer``). The SLO-aware victim picker
+        charges this against a victim's slack so preemption is never
+        modeled as free."""
+        return 2.0 * self.t_host_transfer(n_tokens)
+
+    def predicted_finish_s(self, beta: int, lengths: Sequence[int],
+                           remaining_tokens: int,
+                           offloaded_tokens: int = 0,
+                           hosted_tokens: int = 0,
+                           span_entries: int = 0) -> float:
+        """Seconds until a request with ``remaining_tokens`` left to
+        decode finishes on an instance in the given state (Eq. 5-7).
+
+        Each decode step emits one token per running request, so the
+        per-request token rate is ``tps / beta``; the finish horizon is
+        remaining_tokens / that rate. Used for SLO slack
+        (slack = deadline - now - predicted_finish) in victim selection
+        and dispatch ordering."""
+        if remaining_tokens <= 0:
+            return 0.0
+        rate = self.tps(max(1, beta), lengths, offloaded_tokens,
+                        hosted_tokens, span_entries) / max(1, beta)
+        return remaining_tokens / max(rate, 1e-9)
 
     # --- Eq. 7: instance / cluster throughput ------------------------- #
     def tps(self, beta: int, lengths: Sequence[int],

@@ -59,6 +59,12 @@ def block_hash(parent_hash: int, tokens: Sequence[int]) -> int:
 
 @dataclass
 class RadixNode:
+    """One block-granular radix-tree node (a content-hashed KV block).
+
+    ``replicas`` maps instance id -> device block; ``on_host`` marks a
+    host-tier copy; ``refcount`` pins the chain while requests use it.
+    """
+
     tokens: Tuple[int, ...]                    # this block's token chunk
     hash: int
     parent: Optional["RadixNode"]
@@ -73,6 +79,8 @@ class RadixNode:
 
 @dataclass
 class PrefixCacheStats:
+    """Counters surfaced through ``server.metrics`` (cache_* keys)."""
+
     lookups: int = 0
     hits: int = 0                 # lookups that matched >= 1 block
     hit_blocks: int = 0
@@ -262,10 +270,12 @@ class RadixPrefixCache:
                    if inst_id in nd.replicas and nd.refcount == 0)
 
     def pinned_blocks(self, inst_id: int) -> int:
+        """Cached device blocks on ``inst_id`` pinned by live requests."""
         return sum(1 for nd in self._nodes.values()
                    if inst_id in nd.replicas and nd.refcount > 0)
 
     def device_blocks(self, inst_id: int) -> int:
+        """All cached device blocks resident on ``inst_id``."""
         return sum(1 for nd in self._nodes.values()
                    if inst_id in nd.replicas)
 
@@ -354,9 +364,11 @@ class RadixPrefixCache:
     # --- introspection ------------------------------------------------- #
     @property
     def num_nodes(self) -> int:
+        """Radix nodes currently in the tree."""
         return len(self._nodes)
 
     def host_blocks(self) -> int:
+        """Host-tier frames holding cache replicas (0 without a tier)."""
         return self.tier.used_blocks if self.tier is not None else 0
 
 

@@ -23,6 +23,12 @@ class RequestPlacementEntry:
 
 @dataclass
 class Heartbeat:
+    """Periodic rManager -> gManager state report (delta or full).
+
+    Carries this instance's placement entries, batch size, and memory
+    occupancy — the inputs Algorithm 1 plans from.
+    """
+
     inst_id: int
     seq: int                                   # monotone per instance
     full: bool                                 # full resync vs delta
@@ -64,10 +70,13 @@ class MoveKVCache:
 
     @property
     def num_blocks(self) -> int:
+        """Total blocks moved across all legs."""
         return sum(leg.num_blocks for leg in self.legs)
 
 
 class MoveResult(enum.Enum):
+    """Outcome of executing one ``MoveKVCache`` plan."""
+
     OK = "ok"
     REJECTED = "rejected"          # dst out of space (stale global view)
     # Request reached a terminal state (finished / failed / CANCELLED)

@@ -7,6 +7,15 @@ cooperative inside an in-flight streaming prefill: the engine checks
 ``Request.cancelled`` between chunks and rolls the admission back via
 the all-or-nothing reservation machinery.
 
+PAUSED is the one non-terminal detour: under overload the ``Preemptor``
+stops a RUNNING request at a step boundary, spills its KV chain to the
+host tier, and parks it (prompt/output/stream state intact, device
+state fully released). A paused request later resumes RUNNING with
+byte-identical KV, or is cancelled while parked. ``pause_requested``
+mirrors ``cancelled`` for the cooperative mid-prefill case: the engine
+aborts the admission with the same exact-rollback discipline but keeps
+the request WAITING instead of making it terminal.
+
 Request ids are allocated PER SERVER (``RequestIdAllocator``): two
 ``LLMServer``/``Cluster`` instances in one process each get a dense,
 deterministic 0..N id space instead of sharing one module-global
@@ -34,13 +43,17 @@ class RequestIdAllocator:
         self._counter = itertools.count(start)
 
     def next_id(self) -> int:
+        """Return the next dense request id."""
         return next(self._counter)
 
 
 class RequestState(enum.Enum):
+    """Lifecycle states (see module docstring for the transition map)."""
+
     WAITING = "waiting"
     PREFILLING = "prefilling"
     RUNNING = "running"
+    PAUSED = "paused"          # preempted: KV spilled to host, resumable
     FINISHED = "finished"
     FAILED = "failed"
     CANCELLED = "cancelled"
@@ -48,6 +61,8 @@ class RequestState(enum.Enum):
 
 @dataclass
 class SamplingParams:
+    """Per-request decoding knobs (greedy when ``temperature <= 0``)."""
+
     max_new_tokens: int = 64
     temperature: float = 0.0          # 0 => greedy
     eos_token: Optional[int] = None
@@ -62,6 +77,14 @@ class SamplingParams:
 
 @dataclass
 class Request:
+    """One in-flight generation: prompt, lifecycle state, placement.
+
+    Mutable by design — the engine, scheduler, preemptor, and frontend
+    all annotate it. ``spans`` is the cluster-wide KV placement map;
+    the preemption fields record pause/resume history for the
+    anti-thrash cap and the SLO victim ranking.
+    """
+
     prompt: List[int]
     sampling: SamplingParams = field(default_factory=SamplingParams)
     req_id: int = field(default_factory=lambda: next(_fallback_counter))
@@ -75,6 +98,10 @@ class Request:
     priority: int = 0                 # higher = scheduled first
     deadline_s: Optional[float] = None  # SLO, seconds after arrival
     cancelled: bool = False           # cooperative-cancel flag
+    # --- preemption (overload survival) -------------------------------- #
+    pause_requested: bool = False     # cooperative mid-prefill pause flag
+    preemptions: int = 0              # times this request has been paused
+    paused_at: Optional[float] = None  # monotonic time of the last pause
     slot: Optional[int] = None        # engine batch slot while RUNNING
     # Cluster placement: ordered spans (instance_id, n_tokens) covering
     # [0, len); the LAST span is always on the owner (debtor) instance.
@@ -82,10 +109,12 @@ class Request:
 
     @property
     def length(self) -> int:
+        """Total tokens (prompt + emitted output)."""
         return len(self.prompt) + len(self.output)
 
     @property
     def done(self) -> bool:
+        """True once the request reached a terminal state."""
         return self.state in (RequestState.FINISHED, RequestState.FAILED,
                               RequestState.CANCELLED)
 

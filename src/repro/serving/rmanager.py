@@ -16,6 +16,13 @@ from repro.serving.protocol import Heartbeat, RequestPlacementEntry
 
 
 class RManager:
+    """Per-instance resource manager: the paper's rManager role.
+
+    Owns the instance's ``RankKVPool`` view, tracks which requests this
+    rank OWNS (debtor) vs merely hosts (creditor), and emits the
+    delta-compressed ``Heartbeat`` stream Algorithm 1 plans from.
+    """
+
     def __init__(self, inst_id: int, num_blocks: int, block_size: int,
                  pool: Optional[RankKVPool] = None):
         self.inst_id = inst_id
@@ -48,9 +55,11 @@ class RManager:
 
     # --- placement metadata ------------------------------------------- #
     def set_owner(self, req_id: int, owned: bool = True) -> None:
+        """Mark/unmark this rank as ``req_id``'s owner (debtor)."""
         (self._owned.add if owned else self._owned.discard)(req_id)
 
     def entries(self) -> List[RequestPlacementEntry]:
+        """Current placement entries (one per request with blocks)."""
         out = []
         for rid, rb in self.pool.requests.items():
             if not rb.blocks:
@@ -62,6 +71,7 @@ class RManager:
 
     # --- heartbeat (delta unless full resync requested) ---------------- #
     def heartbeat(self, full: bool = False) -> Heartbeat:
+        """Build the next heartbeat (delta unless ``full`` resync)."""
         self._seq += 1
         cur = {e.req_id: e for e in self.entries()}
         if full:
@@ -102,6 +112,7 @@ class RManager:
         return blocks
 
     def cancel_move_in(self, num_blocks: int) -> None:
+        """Roll back a refused move's capacity reservation."""
         self.pool.alloc.cancel_reservation(num_blocks)
 
     def move_out_prefix(self, req_id: int, num_blocks: int) -> int:
@@ -116,5 +127,6 @@ class RManager:
         return req_id in self.pool.requests and req_id not in self._owned
 
     def release_request(self, req_id: int) -> None:
+        """Free every block and ownership record of ``req_id``."""
         self.pool.release(req_id)
         self._owned.discard(req_id)

@@ -72,13 +72,16 @@ class InstanceView:
 
     @property
     def mem_util(self) -> float:
+        """Fraction of this instance's pool blocks in use."""
         return self.mem_blocks_used / max(1, self.mem_blocks_total)
 
     @property
     def free_blocks(self) -> int:
+        """Unused pool blocks in this view."""
         return self.mem_blocks_total - self.mem_blocks_used
 
     def copy(self) -> "InstanceView":
+        """Deep-enough copy: planning mutates it, heartbeats stay pristine."""
         return replace(
             self, requests=dict(self.requests),
             req_spans={r: dict(s) for r, s in self.req_spans.items()})
@@ -105,6 +108,7 @@ class StripedMove:
 
     @property
     def num_blocks(self) -> int:
+        """Total blocks this striped move transfers."""
         return sum(leg.num_blocks for leg in self.legs)
 
 
@@ -130,10 +134,15 @@ class GreedyScheduler:
         self.mem_util_thres = mem_util_thres
         self.max_moves = max_moves_per_round
         self.max_stripes = max_stripes
-        # Typical length of a newly-admitted request — in deployment the
-        # gManager estimates this from the recent arrival stream; it sets
-        # how much batch growth a freed block buys (paper Fig. 7a slope).
+        # Typical length of a newly-admitted request. The config value
+        # is only the PRIOR: the gManager's EWMA ``ArrivalEstimator``
+        # overwrites it from the live arrival stream before every
+        # planning round, so the batch-growth credit (paper Fig. 7a
+        # slope) tracks the traffic actually hitting the cluster.
         self.avg_new_len = avg_new_req_len
+        # EWMA arrival rate (req/s) from the same estimator; 0 means
+        # "unknown" (no frontend feeding us) and disables the cap below.
+        self.arrival_rate_hz = 0.0
         # Amortization window of the reclaim gain check: undoing a
         # stripe must win back its own movement cost within this many
         # seconds of modeled decode, or the eviction is not planned.
@@ -154,6 +163,39 @@ class GreedyScheduler:
                              offloaded_tokens=v.offloaded_tokens,
                              hosted_tokens=v.hosted_tokens,
                              span_entries=entries, max_span_tokens=mx)
+
+    # --- SLO-aware preemption scoring --------------------------------- #
+    def predicted_finish_s(self, v: InstanceView,
+                           remaining_tokens: int) -> float:
+        """Eq. 5-7 horizon: modeled seconds until a request running on
+        instance ``v`` with ``remaining_tokens`` left to decode
+        finishes, given v's current batch/lengths/spans."""
+        lengths = [ln for (ln, _, own) in v.requests.values() if own]
+        entries, _ = self._span_stats(v)
+        return self.perf.predicted_finish_s(
+            v.batch_size, lengths, remaining_tokens,
+            offloaded_tokens=v.offloaded_tokens,
+            hosted_tokens=v.hosted_tokens, span_entries=entries)
+
+    def victim_slack_s(self, v: InstanceView, resident_tokens: int,
+                       remaining_tokens: int,
+                       deadline_at: Optional[float],
+                       now: float) -> float:
+        """SLO slack of a preemption candidate AFTER paying the pause.
+
+        slack = deadline - now - predicted_finish - spill/resume cost
+        (``t_preempt_roundtrip`` over ``resident_tokens`` of KV). A
+        request without a deadline has infinite slack — the preferred
+        victim. The preemptor only pauses candidates whose charged
+        slack stays above ``OverloadPolicy.victim_min_slack_s``, so a
+        victim is expected to STILL meet its own SLO after the detour;
+        heavy-tail overload therefore degrades the slackest requests
+        first and p99-critical ones last."""
+        if deadline_at is None:
+            return float("inf")
+        return deadline_at - now \
+            - self.predicted_finish_s(v, remaining_tokens) \
+            - self.perf.t_preempt_roundtrip(resident_tokens)
 
     def _apply_leg(self, d: InstanceView, c: InstanceView, rid: int,
                    k_blocks: int) -> None:
@@ -213,6 +255,14 @@ class GreedyScheduler:
         beta_sat = int(self.perf.hw.critical_intensity)
         extra = min(moved_tok // self.avg_new_len,
                     max(0, beta_sat - base_batch))
+        # Freed memory only buys throughput if requests actually ARRIVE
+        # to fill it: cap the credit by the EWMA-estimated arrivals
+        # within the amortization horizon (unknown rate => uncapped,
+        # the original optimistic behavior).
+        if self.arrival_rate_hz > 0.0:
+            expected = int(self.arrival_rate_hz *
+                           self.reclaim_horizon_s) + 1
+            extra = min(extra, expected)
         own_lens = [ln for (ln, _, o) in d2.requests.values() if o]
         entries, mx = self._span_stats(d2)
         return self.perf.tps(d2.batch_size + extra,
@@ -470,12 +520,15 @@ class GreedyScheduler:
     def plan(self, views: List[InstanceView],
              urgency: Optional[Dict[int, float]] = None
              ) -> List[StripedMove]:
+        """One Algorithm-1 round: offload stressed debtors, reclaim
+        stressed creditors; returns the striped move plans in order."""
         # Work on copies: the caller's heartbeat-fed views stay pristine
         # so the gManager can re-plan from the same state.
         urgency = urgency or {}
         views = [v.copy() for v in views if v.alive]
 
         def inst_urgency(v: InstanceView) -> float:
+            """Most urgent owned request on ``v`` (0 if none)."""
             return max((urgency.get(rid, 0.0)
                         for rid, (_, _, own) in v.requests.items()
                         if own), default=0.0)

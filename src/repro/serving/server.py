@@ -25,6 +25,16 @@ debtors are offloaded/served first. Cancellation propagates through
 every layer (engine slot, in-flight streaming prefill, creditor-hosted
 spans, planned moves) — see ``Cluster.cancel``.
 
+With ``ServingConfig.overload.enabled`` the frontend also survives
+sustained overload instead of queueing through it: when urgent arrivals
+find zero free slots, ``_overload_control`` pauses SLO-slack victims
+(their KV spills byte-for-byte to a pinned host tier — see
+``repro.serving.preempt``) and hands the freed slots to the arrivals;
+parked requests resume with byte-identical KV once capacity returns.
+Every ``submit`` additionally feeds the gManager's EWMA arrival
+estimator, which replaces the static ``avg_new_req_len`` knob in
+Algorithm 1's planning.
+
 The cluster's ``step()`` loop still exists underneath — it is the
 INTERNAL execution engine this frontend drives.
 """
@@ -64,14 +74,17 @@ class RequestHandle:
 
     @property
     def req_id(self) -> int:
+        """The underlying request's id."""
         return self._req.req_id
 
     @property
     def status(self) -> RequestState:
+        """Current lifecycle state of the request."""
         return self._req.state
 
     @property
     def done(self) -> bool:
+        """True once the request reached a terminal state."""
         return self._req.done
 
     def tokens(self, max_steps: int = 100_000) -> Iterator[int]:
@@ -173,6 +186,12 @@ class LLMServer:
             else arrival_time
         handle = RequestHandle(self, req)
         self._handles[req.req_id] = handle
+        # Every arrival (even one about to be shed) feeds the gManager's
+        # EWMA traffic estimator: expected KV footprint is the prompt
+        # plus the decode budget — the worst case the pool must plan for.
+        self.cluster.gmanager.observe_arrival(
+            req.arrival_time,
+            len(req.prompt) + req.sampling.max_new_tokens)
         if (self.config.admission_policy == "reject"
                 and self._waiting_count() >= self.config.max_waiting):
             req.state = RequestState.FAILED
@@ -229,10 +248,43 @@ class LLMServer:
             self.cluster.submit(req, now=now)
         del self._queue[:budget]
 
+    def _overload_control(self, now: float) -> None:
+        """Preempt-for-queue: when dispatch left urgent requests queued
+        with zero free slots, pause SLO-slack victims to make room.
+
+        Runs after ``_dispatch`` each step (no-op unless the overload
+        policy is enabled). Each queued request, most urgent first, asks
+        the preemptor for a victim it out-ranks whose charged slack
+        survives the detour; the victim's freed slot takes the queued
+        request directly (``submit_to``), pairing preemption with the
+        arrival that justified it. The preemptor's resume path is told
+        the remaining queue's best urgency (``queue_pressure``) so
+        parked requests never steal capacity the queue is entitled to."""
+        pre = self.cluster.preemptor
+        if pre is None:
+            return
+        if not self._queue:
+            pre.queue_pressure = None
+            return
+        if self._free_slots() <= 0:
+            self._queue.sort(
+                key=lambda r: (-r.urgency(now), r.arrival_time))
+            for req in list(self._queue):
+                inst = pre.pause_for(req, now=now)
+                if inst is None:
+                    break           # no eligible victim for anyone less
+                self._queue.remove(req)
+                self.cluster.submit_to(req, inst, now=now)
+        pre.queue_pressure = max(
+            (r.urgency(now) for r in self._queue), default=None)
+
     # --- execution ----------------------------------------------------- #
     def step(self, now: Optional[float] = None) -> int:
-        """One frontend iteration: dispatch, then one cluster step."""
+        """One frontend iteration: dispatch, overload control (paused
+        victims / preempted slots when enabled), then one cluster step."""
+        now = time.monotonic() if now is None else now
         self._dispatch(now)
+        self._overload_control(now)
         return self.cluster.step(now=now)
 
     def drain(self, max_steps: int = 10_000) -> int:
@@ -261,6 +313,7 @@ class LLMServer:
 
     @property
     def handles(self) -> List[RequestHandle]:
+        """Live (unreaped) request handles, including queued ones."""
         return list(self._handles.values())
 
     @property
@@ -305,6 +358,23 @@ class LLMServer:
         if cl.host_tier is not None:
             out["host_blocks_used"] = float(cl.host_tier.used_blocks)
             out["host_blocks_capacity"] = float(cl.host_tier.capacity)
+        # Overload-survival counters (zeros when the policy is off) and
+        # the live traffic estimate feeding Algorithm 1.
+        out.update({
+            "preemptions": 0.0,
+            "preempt_resumes": 0.0,
+            "paused_now": 0.0,
+            "preempt_tier_blocks_used": 0.0,
+            "arrival_rate_hz": cl.gmanager.arrivals.rate_hz,
+            "avg_new_req_len_est":
+                float(cl.gmanager.arrivals.avg_new_req_len),
+        })
+        if cl.preemptor is not None:
+            out["preemptions"] = float(cl.preemptor.stats.preemptions)
+            out["preempt_resumes"] = float(cl.preemptor.stats.resumes)
+            out["paused_now"] = float(len(cl.preemptor.paused))
+            out["preempt_tier_blocks_used"] = float(
+                cl.preemptor.tier.used_blocks)
         return out
 
     # --- open-loop event pump ------------------------------------------ #
@@ -365,7 +435,7 @@ class LLMServer:
         now = time.monotonic() if now is None else now
         ttfts, tbts, finished, failed, cancelled, toks = \
             [], [], 0, 0, 0, 0
-        deadline_miss = 0
+        deadline_miss = preempted = goodput = dl_total = dl_met = 0
         for h in handles:
             r = h._req
             toks += len(r.output)
@@ -375,14 +445,26 @@ class LLMServer:
                 failed += 1
             elif r.state == RequestState.CANCELLED:
                 cancelled += 1
+            if r.preemptions > 0:
+                preempted += 1
             if r.token_times:
                 ttfts.append(r.token_times[0] - r.arrival_time)
                 tbts.extend(np.diff(r.token_times))
             dl = r.deadline_at
             if dl is not None and (r.finish_time or now) > dl:
                 deadline_miss += 1
+            # Deadline GOODPUT: a request contributes only by finishing
+            # in time (no deadline = any finish counts). The bench's
+            # preemption-vs-baseline gate compares this.
+            on_time = r.state == RequestState.FINISHED and (
+                dl is None or (r.finish_time or now) <= dl)
+            goodput += int(on_time)
+            if dl is not None:
+                dl_total += 1
+                dl_met += int(on_time)
 
         def pct(xs, q):
+            """Percentile helper tolerating empty series (-> nan)."""
             return float(np.percentile(xs, q)) if len(xs) else float("nan")
 
         return {
@@ -391,6 +473,10 @@ class LLMServer:
             "failed": float(failed),
             "cancelled": float(cancelled),
             "deadline_missed": float(deadline_miss),
+            "deadline_goodput": goodput / max(1, len(handles)),
+            "slo_attainment": (dl_met / dl_total) if dl_total
+            else float("nan"),
+            "preempted": float(preempted),
             "tokens": float(toks),
             "throughput_tok_s": toks / max(wall_s, 1e-9),
             "ttft_p50": pct(ttfts, 50),

@@ -62,6 +62,7 @@ class ServeLayout:
 
     @property
     def seq_model(self) -> bool:
+        """True when the TP axis also shards the pool's sequence dim."""
         return self.tp_axis in self.pool_axes
 
     @property
@@ -122,6 +123,7 @@ def serve_decode_step(params, cfg: ModelConfig, layout: ServeLayout,
     x = wsc(x, P(layout.batch_axes, None, None))
 
     def attn_layer(lp, x, pk_l, pv_l):
+        """One layer's attention: write new KV, paged partial, merge."""
         h = apply_norm(lp["ln1"], x, cfg)
         q, k, v = qkv_project(lp["attn"], h, lens[:, None], cfg)
         pk_l = _write_kv(pk_l, k[:, 0], wblk, woff)
@@ -133,6 +135,7 @@ def serve_decode_step(params, cfg: ModelConfig, layout: ServeLayout,
         return x, pk_l, pv_l
 
     def ffn_part(lp, x, moe):
+        """One layer's FFN/MoE half."""
         h = apply_norm(lp["ln2"], x, cfg)
         if moe:
             x = x + apply_moe(lp["moe"], h, cfg, capacity_factor)
@@ -143,7 +146,9 @@ def serve_decode_step(params, cfg: ModelConfig, layout: ServeLayout,
     lc = layer_constraints or {}
 
     def make_body(moe, name):
+        """Scan body factory for the ``moe``/dense layer stack."""
         def body(x, xs):
+            """Scanned per-layer step (attention + FFN)."""
             lp, pk_l, pv_l = xs
             if name in lc:
                 lp = lc[name](lp)
@@ -247,12 +252,15 @@ def serve_decode_step_opt(params, cfg: ModelConfig, layout: ServeLayout,
     lc = layer_constraints or {}
 
     def attn_layer(lp, x):
+        """QKV projection only; the paged partial runs in the body."""
         h = apply_norm(lp["ln1"], x, cfg)
         q, k, v = qkv_project(lp["attn"], h, lens[:, None], cfg)
         return q, k, v, x
 
     def make_body(moe, name):
+        """Scan body factory for the ``moe``/dense layer stack."""
         def body(x, xs):
+            """Scanned per-layer step (attention + FFN)."""
             lp, pk_l, pv_l = xs
             if name in lc:
                 lp = lc[name](lp)
@@ -388,6 +396,7 @@ def serve_prefill_step(params, cfg: ModelConfig, layout: ServeLayout,
     ba = layout.batch_axes
 
     def acc_pin(acc):
+        """Sharding-pin the online-softmax carry (o, m, l)."""
         o, m, l = acc
         return (wsc(o, P(ba, None, h_ax, None)),
                 wsc(m, P(ba, None, h_ax)), wsc(l, P(ba, None, h_ax)))
@@ -403,6 +412,7 @@ def serve_prefill_step(params, cfg: ModelConfig, layout: ServeLayout,
                and n_sub and nblocks % n_sub == 0)
 
     def write_pool(k):                               # [B, S, K, hd]
+        """Lay a layer's fresh KV into the global pool layout."""
         if aligned:
             # With the data-local layout, the pool IS a reshape of k:
             # pool[d*n_sub+sub, (b%pd)*pr + i] = k[b, (i*n_sub+sub)*bs:..]
@@ -425,6 +435,7 @@ def serve_prefill_step(params, cfg: ModelConfig, layout: ServeLayout,
         pool = wsc(pool, layout.pool_spec())
 
         def one(pool_p, wb_p):
+            """Per-rank scatter of every token into the local slice."""
             # Scatter all B*S tokens; non-local indices (NB_loc) drop.
             flat_b = wb_p.reshape(-1)
             flat_o = woff.reshape(-1)
@@ -433,6 +444,7 @@ def serve_prefill_step(params, cfg: ModelConfig, layout: ServeLayout,
         return jax.vmap(one)(pool, wblk)
 
     def attn_layer(lp, x):
+        """One prefill layer's attention over the full chunk."""
         h = apply_norm(lp["ln1"], x, cfg)
         q, k, v = qkv_project(lp["attn"], h, positions, cfg)
         out = core(q, k, v)
@@ -443,7 +455,9 @@ def serve_prefill_step(params, cfg: ModelConfig, layout: ServeLayout,
     lc = layer_constraints or {}
 
     def make_body(moe, name):
+        """Scan body factory for the ``moe``/dense layer stack."""
         def body(x, lp):
+            """Scanned per-layer prefill step."""
             if name in lc:
                 lp = lc[name](lp)
             x, kv = attn_layer(lp, x)
@@ -526,6 +540,7 @@ _GLOBAL_TRACE_COUNT = 0
 
 
 def global_trace_count() -> int:
+    """Times a global-pool step retraced (tests bound this)."""
     return _GLOBAL_TRACE_COUNT
 
 

@@ -38,6 +38,8 @@ from repro.serving.perfmodel import InstancePerfModel
 
 @dataclass
 class SimRequest:
+    """Analytic-simulator request: lengths + creditor placement only."""
+
     req_id: int
     arrival: float
     prompt_len: int
@@ -51,15 +53,19 @@ class SimRequest:
 
     @property
     def length(self) -> int:
+        """Current total tokens (prompt + generated)."""
         return self.prompt_len + self.generated
 
     @property
     def offloaded(self) -> int:
+        """Tokens hosted on creditor instances."""
         return sum(self.spans.values())
 
 
 @dataclass
 class SimInstance:
+    """Analytic-simulator instance: perf model + token accounting."""
+
     inst_id: int
     perf: InstancePerfModel
     kv_capacity_tokens: int
@@ -71,14 +77,17 @@ class SimInstance:
 
     @property
     def local_tokens(self) -> int:
+        """Debtor-resident tokens of this instance's running set."""
         return sum(r.length - r.offloaded for r in self.running)
 
     @property
     def free_tokens(self) -> int:
+        """KV capacity left after local + hosted tokens."""
         return self.kv_capacity_tokens - self.local_tokens \
             - self.hosted_tokens
 
     def step_time(self) -> float:
+        """Eq. 5-7 step time of the current batch (all layers)."""
         beta = len(self.running)
         if beta == 0:
             # Hosted-span MicroAttention cost is charged on the debtor
@@ -106,6 +115,13 @@ class SimInstance:
 
 
 class ClusterSimulator:
+    """Event-driven analytic cluster sim (paper Figs. 9-10 regimes).
+
+    No tensors: instances advance on ``InstancePerfModel`` step times,
+    and the scheduling ``policy`` controls admission/offload — used by
+    the e2e-traces benchmark to compare policies at paper scale.
+    """
+
     def __init__(self, cfg: ModelConfig, *, policy: str,
                  n_instances: int, chips_per_instance: int,
                  schedule_every: float = 0.25,
@@ -364,6 +380,7 @@ class ClusterSimulator:
 def make_policy_cluster(cfg: ModelConfig, policy: str, total_chips: int,
                         chips_per_instance: int, *,
                         striped: bool = True) -> ClusterSimulator:
+    """Build the simulator laid out for a named scheduling policy."""
     if policy == "vllm-single":
         return ClusterSimulator(cfg, policy=policy, n_instances=1,
                                 chips_per_instance=total_chips,

@@ -1,0 +1,141 @@
+"""Documentation gates (no jax required — runs in the CI docs job).
+
+Three checks keep the docs from rotting:
+
+  * knob drift — the ``docs/ARCHITECTURE.md`` knob-reference tables and
+    the ``ServingConfig``/``OverloadPolicy`` dataclasses must agree
+    field-for-field, in BOTH directions (a new knob without a doc row
+    fails, and so does a doc row for a removed knob). ``config.py`` is
+    imported standalone so this file never pulls in jax.
+  * internal links — every relative markdown link in README.md and
+    docs/ARCHITECTURE.md resolves to a real file.
+  * docstring coverage — an AST mirror of the ruff D100-D104 subset
+    enforced on ``src/repro/serving/`` (module/class/function/package
+    docstrings for public names), so the gate holds even where ruff
+    isn't installed.
+"""
+import ast
+import dataclasses
+import importlib.util
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+ARCH = REPO / "docs" / "ARCHITECTURE.md"
+README = REPO / "README.md"
+SERVING = REPO / "src" / "repro" / "serving"
+
+
+def _load_config_module():
+    """Import serving/config.py standalone (it has no jax imports)."""
+    spec = importlib.util.spec_from_file_location(
+        "serving_config_standalone", SERVING / "config.py")
+    mod = importlib.util.module_from_spec(spec)
+    # Registered so dataclasses can resolve the module's (string,
+    # because of ``from __future__ import annotations``) annotations.
+    sys.modules[spec.name] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _table_fields(section: str) -> set:
+    """Field names from the knob table under ``### `section```."""
+    text = ARCH.read_text()
+    m = re.search(rf"### `{section}`\n(.*?)(?:\n### |\n## |\Z)", text,
+                  re.DOTALL)
+    assert m, f"ARCHITECTURE.md lost its `{section}` knob table"
+    return set(re.findall(r"^\| `(\w+)` \|", m.group(1), re.MULTILINE))
+
+
+# ------------------------------------------------------------------ #
+# knob drift: dataclass fields <-> ARCHITECTURE.md tables
+# ------------------------------------------------------------------ #
+def test_serving_config_knobs_match_architecture_doc():
+    mod = _load_config_module()
+    code = {f.name for f in dataclasses.fields(mod.ServingConfig)}
+    doc = _table_fields("ServingConfig")
+    assert code - doc == set(), \
+        f"knobs missing from docs/ARCHITECTURE.md: {sorted(code - doc)}"
+    assert doc - code == set(), \
+        f"docs/ARCHITECTURE.md rows for removed knobs: {sorted(doc - code)}"
+
+
+def test_overload_policy_knobs_match_architecture_doc():
+    mod = _load_config_module()
+    code = {f.name for f in dataclasses.fields(mod.OverloadPolicy)}
+    doc = _table_fields("OverloadPolicy")
+    assert code - doc == set(), \
+        f"knobs missing from docs/ARCHITECTURE.md: {sorted(code - doc)}"
+    assert doc - code == set(), \
+        f"docs/ARCHITECTURE.md rows for removed knobs: {sorted(doc - code)}"
+
+
+def test_request_states_all_documented():
+    """Every RequestState value appears in the lifecycle section."""
+    tree = ast.parse((SERVING / "request.py").read_text())
+    states = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "RequestState":
+            for stmt in node.body:
+                if isinstance(stmt, ast.Assign):
+                    states.extend(t.id for t in stmt.targets
+                                  if isinstance(t, ast.Name))
+    assert states, "RequestState enum not found"
+    text = ARCH.read_text()
+    missing = [s for s in states if s not in text]
+    assert not missing, \
+        f"lifecycle states missing from ARCHITECTURE.md: {missing}"
+
+
+# ------------------------------------------------------------------ #
+# internal markdown links resolve
+# ------------------------------------------------------------------ #
+def test_internal_links_resolve():
+    broken = []
+    for doc in (README, ARCH):
+        for target in re.findall(r"\]\(([^)#]+)(?:#[^)]*)?\)",
+                                 doc.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (doc.parent / target).resolve().exists():
+                broken.append(f"{doc.name} -> {target}")
+    assert not broken, f"broken internal links: {broken}"
+
+
+# ------------------------------------------------------------------ #
+# docstring coverage: AST mirror of the ruff D100-D104 serving gate
+# ------------------------------------------------------------------ #
+def _missing_docstrings(path: pathlib.Path):
+    tree = ast.parse(path.read_text())
+    missing = []
+    if ast.get_docstring(tree) is None:        # D100 / D104
+        missing.append(f"{path.name}:1 module docstring")
+
+    def walk(node, private, prefix):
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            name = child.name
+            dunder = name.startswith("__") and name.endswith("__")
+            priv = private or name.startswith("_")
+            if (not priv and not dunder
+                    and ast.get_docstring(child) is None):
+                kind = ("class" if isinstance(child, ast.ClassDef)
+                        else "def")                    # D101-D103
+                missing.append(
+                    f"{path.name}:{child.lineno} {kind} {prefix}{name}")
+            walk(child, priv, prefix + name + ".")
+
+    walk(tree, False, "")
+    return missing
+
+
+def test_serving_public_api_has_docstrings():
+    missing = []
+    for py in sorted(SERVING.glob("*.py")):
+        missing.extend(_missing_docstrings(py))
+    assert not missing, \
+        "public serving names without docstrings:\n  " + \
+        "\n  ".join(missing)

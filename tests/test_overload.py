@@ -1,0 +1,321 @@
+"""Overload survival (ISSUE-8): preemptive pause/host-spill scheduling.
+
+Covers the tentpole's correctness surface:
+
+  (a) pause/resume round trip — a running request paused to the
+      preempt tier and resumed through the paged path emits EXACTLY
+      the tokens an unpreempted oracle emits (byte-identical KV), in
+      both per-instance and global-pool modes;
+  (b) a pause releases every device resource exactly once (allocator
+      state returns to pre-admission; creditor spans never
+      double-free) and the resume restores a clean steady state;
+  (c) a mid-prefill pause aborts at the chunk boundary with the exact
+      cancel-style rollback but re-queues the request (WAITING, flag
+      cleared, preemption counted) instead of retiring it;
+  (d) the EWMA arrival estimator converges on the live trace and is
+      pushed into the scheduler before planning (replacing the static
+      ``avg_new_req_len`` knob);
+  (e) SLO-aware victim selection prefers no-deadline (infinite-slack)
+      victims and respects the urgency ordering; the server-level
+      preempt-for-queue path serves an urgent arrival by pausing a
+      best-effort victim and later resuming it;
+  (f) cancel-while-paused retires the parked request and frees its
+      preempt-tier frames.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import decode_step, init_params
+from repro.models.prefill import prefill
+from repro.serving import (LLMServer, RequestState, SamplingParams,
+                           ServingConfig)
+from repro.serving.config import OverloadPolicy
+from repro.serving.gmanager import ArrivalEstimator
+import jax.numpy as jnp
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmo-1b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def _alloc_snapshot(cluster):
+    out = {}
+    for i, e in cluster.engines.items():
+        a = e.rmanager.pool.alloc
+        out[i] = (a.used_count, a.reserved, sorted(a._free),
+                  {r: list(rb.blocks)
+                   for r, rb in e.rmanager.pool.requests.items()})
+    return out
+
+
+def _overload_server(params, cfg, *, global_pool=False, **overrides):
+    policy = overrides.pop("policy", OverloadPolicy(enabled=True))
+    return LLMServer(params, cfg, ServingConfig.smoke(
+        overload=policy, global_pool=global_pool, **overrides))
+
+
+# ------------------------------------------------------------------ #
+# (a) pause/resume token identity vs the unpreempted oracle
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("global_pool", [False, True],
+                         ids=["per-instance", "global-pool"])
+def test_pause_resume_token_identity(setup, global_pool):
+    cfg, params = setup
+    rng = np.random.default_rng(80)
+    prompt = rng.integers(0, cfg.vocab_size, 12).tolist()
+    n_new = 14
+    server = _overload_server(params, cfg, global_pool=global_pool)
+    pre = server.cluster.preemptor
+    assert pre is not None
+
+    h = server.submit(prompt, SamplingParams(max_new_tokens=n_new))
+    req = h._req
+    for _ in range(5):
+        server.step()
+    assert req.state == RequestState.RUNNING and len(req.output) >= 5
+
+    assert pre.pause(req)
+    assert req.state == RequestState.PAUSED
+    assert req.slot is None and not h.done
+    assert pre.tier.used_blocks > 0
+
+    # With no queue and free capacity the very next step resumes it;
+    # result() drives to completion through the resume path.
+    out = h.result()
+    assert req.state == RequestState.FINISHED
+    assert req.preemptions == 1
+    assert pre.stats.resumes == 1 and not pre.paused
+    assert pre.tier.used_blocks == 0          # frames dropped at resume
+    assert out == _greedy_reference(params, cfg, prompt, n_new)
+
+
+# ------------------------------------------------------------------ #
+# (a2) spanning request paused MID-DECODE: the live local/creditor
+# split has drifted from admission's quota math (decode appends grew
+# the local tail), and the resume lands in the same step as the
+# pause's queued finished event. Token identity requires BOTH the
+# recorded-layout reproduction in resume_paused and the drain skipping
+# live requests — each regression flips tokens on this scenario.
+# ------------------------------------------------------------------ #
+def test_pause_resume_spanning_mid_decode_identity(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(99)
+    prompt = rng.integers(0, cfg.vocab_size, 40).tolist()  # > quota: spans
+    n_new = 8
+    server = _overload_server(params, cfg)
+    cl = server.cluster
+
+    h = server.submit(prompt, SamplingParams(max_new_tokens=n_new))
+    req = h._req
+    for _ in range(3):
+        server.step()
+    assert req.state == RequestState.RUNNING
+    assert any(e.rmanager.is_hosting(req.req_id)
+               for e in cl.engines.values()), "expected a creditor span"
+
+    assert cl.preemptor.pause(req)
+    rec = cl.preemptor.paused[req.req_id]
+    assert rec.remote_layout, "paused chain should record creditor runs"
+
+    out = h.result()                  # resumes next step, runs to finish
+    assert req.preemptions == 1 and cl.preemptor.stats.resumes == 1
+    assert out == _greedy_reference(params, cfg, prompt, n_new)
+
+    # Same-step resume must survive the pause's finished-event drain:
+    # nothing leaked, nothing double-released.
+    server.step()
+    for e in cl.engines.values():
+        a = e.rmanager.pool.alloc
+        assert a.reserved == 0 and a.used_count == 0
+    assert cl.preemptor.tier.used_blocks == 0
+
+
+# ------------------------------------------------------------------ #
+# (b) exact release at pause: allocator returns to pre-admission state
+# ------------------------------------------------------------------ #
+def test_pause_releases_everything_exactly_once(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(81)
+    server = _overload_server(
+        params, cfg, max_local_len=16, block_size=4, pool_blocks=32,
+        policy=OverloadPolicy(enabled=True, min_pause_s=600.0))
+    cl = server.cluster
+    before = _alloc_snapshot(cl)
+
+    # 40-token prompt with a 16-token quota: admission stripes a
+    # creditor span, so the pause must also release hosted blocks.
+    prompt = rng.integers(0, cfg.vocab_size, 40).tolist()
+    h = server.submit(prompt, SamplingParams(max_new_tokens=6))
+    req = h._req
+    server.step()
+    assert req.state == RequestState.RUNNING
+    assert any(e.rmanager.is_hosting(req.req_id)
+               for e in cl.engines.values()
+               if e.inst_id != cl.engines[0].inst_id or True)
+
+    assert cl.preemptor.pause(req)
+    # Device state is EXACTLY the pre-admission state: slot, local
+    # blocks, cache pins and creditor spans all released, once.
+    assert _alloc_snapshot(cl) == before
+    # min_pause_s keeps it parked: the finished-event drain at step end
+    # must not double-release, and no step advances it.
+    server.step()
+    assert _alloc_snapshot(cl) == before
+    assert req.state == RequestState.PAUSED
+
+    cl.preemptor.policy = OverloadPolicy(enabled=True)  # allow resume
+    out = h.result()
+    assert req.state == RequestState.FINISHED
+    assert out == _greedy_reference(params, cfg, prompt, 6)
+    # Steady state after finish: everything released again.
+    server.step()
+    assert _alloc_snapshot(cl) == before
+
+
+# ------------------------------------------------------------------ #
+# (c) mid-prefill pause: exact rollback, request survives as WAITING
+# ------------------------------------------------------------------ #
+def test_midprefill_pause_rolls_back_and_requeues(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(82)
+    server = _overload_server(params, cfg)
+    cl = server.cluster
+    before = _alloc_snapshot(cl)
+
+    prompt = rng.integers(0, cfg.vocab_size, 24).tolist()
+    h = server.submit(prompt, SamplingParams(max_new_tokens=4))
+    req = h._req
+    req.pause_requested = True       # lands before the first chunk
+    server.step()
+    assert req.state == RequestState.WAITING
+    assert not req.pause_requested and req.preemptions == 1
+    assert _alloc_snapshot(cl) == before
+
+    out = h.result()                 # re-admits (re-prefills) cleanly
+    assert out == _greedy_reference(params, cfg, prompt, 4)
+
+
+# ------------------------------------------------------------------ #
+# (d) EWMA arrival estimator feeds Algorithm-1 planning
+# ------------------------------------------------------------------ #
+def test_arrival_estimator_converges_and_feeds_scheduler(setup):
+    est = ArrivalEstimator(alpha=0.5, init_len=100)
+    assert est.rate_hz == 0.0 and est.avg_new_req_len == 100
+    t = 0.0
+    for _ in range(40):
+        est.observe(t, 30)
+        t += 0.25                    # 4 req/s, 30-token footprint
+    assert est.avg_new_req_len == 30
+    assert est.rate_hz == pytest.approx(4.0, rel=1e-3)
+
+    cfg, params = setup
+    server = _overload_server(params, cfg)
+    gm = server.cluster.gmanager
+    assert gm.scheduler.avg_new_len == server.config.avg_new_req_len
+    for i in range(6):
+        server.submit([1, 2, 3], SamplingParams(max_new_tokens=5),
+                      arrival_time=float(i))
+    server.step()                    # plan round pushes the estimate
+    server.cluster.gmanager.plan_moves()
+    assert gm.scheduler.avg_new_len == gm.arrivals.avg_new_req_len
+    assert gm.scheduler.arrival_rate_hz == gm.arrivals.rate_hz
+    assert gm.arrivals.avg_new_req_len != server.config.avg_new_req_len
+    server.drain()
+
+
+# ------------------------------------------------------------------ #
+# (e) SLO-aware victims + server-level preempt-for-queue
+# ------------------------------------------------------------------ #
+def test_victim_ranking_prefers_slack(setup):
+    cfg, params = setup
+    server = _overload_server(params, cfg, n_instances=1, max_batch=2)
+    rng = np.random.default_rng(83)
+    slack_h = server.submit(rng.integers(0, cfg.vocab_size, 8).tolist(),
+                            SamplingParams(max_new_tokens=20))
+    tight_h = server.submit(rng.integers(0, cfg.vocab_size, 8).tolist(),
+                            SamplingParams(max_new_tokens=20),
+                            deadline_s=0.75)
+    for _ in range(3):
+        server.step()
+    import time
+    ranked = server.cluster.preemptor.rank_victims(time.monotonic())
+    assert [r.req_id for _, r in ranked][0] == slack_h.req_id
+    assert ranked[0][0] == float("inf")      # no deadline => max slack
+    # The deadline-carrying request's slack is finite and charged the
+    # preemption round trip.
+    tight = dict((r.req_id, s) for s, r in ranked)
+    assert tight[tight_h.req_id] < float("inf")
+    server.drain()
+
+
+def test_urgent_arrival_preempts_and_victim_resumes(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(84)
+    server = _overload_server(params, cfg, n_instances=1, max_batch=1)
+    pre = server.cluster.preemptor
+    bg_prompt = rng.integers(0, cfg.vocab_size, 10).tolist()
+    bg = server.submit(bg_prompt, SamplingParams(max_new_tokens=16))
+    for _ in range(4):
+        server.step()
+    assert bg._req.state == RequestState.RUNNING
+
+    urgent = server.submit(rng.integers(0, cfg.vocab_size, 6).tolist(),
+                           SamplingParams(max_new_tokens=4),
+                           priority=1, deadline_s=60.0)
+    server.step()
+    # The background request was paused and the urgent one took its slot.
+    assert bg._req.state == RequestState.PAUSED
+    assert pre.stats.preemptions == 1
+    urgent_out = urgent.result()
+    assert len(urgent_out) == 4
+
+    bg_out = bg.result()
+    assert pre.stats.resumes == 1
+    assert bg._req.preemptions == 1
+    assert bg_out == _greedy_reference(params, cfg, bg_prompt, 16)
+
+    m = server.metrics
+    assert m["preemptions"] == 1.0 and m["preempt_resumes"] == 1.0
+    assert m["paused_now"] == 0.0
+    fm = LLMServer.frontend_metrics([bg, urgent], wall_s=1.0)
+    assert fm["preempted"] == 1.0
+    assert fm["deadline_goodput"] == 1.0
+    assert fm["slo_attainment"] == 1.0
+
+
+# ------------------------------------------------------------------ #
+# (f) cancel while paused
+# ------------------------------------------------------------------ #
+def test_cancel_while_paused(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(85)
+    server = _overload_server(params, cfg)
+    h = server.submit(rng.integers(0, cfg.vocab_size, 10).tolist(),
+                      SamplingParams(max_new_tokens=30))
+    for _ in range(3):
+        server.step()
+    pre = server.cluster.preemptor
+    assert pre.pause(h._req)
+    assert pre.tier.used_blocks > 0
+    assert server.cancel(h.req_id)
+    assert h.status == RequestState.CANCELLED and h.done
+    assert pre.tier.used_blocks == 0 and not pre.paused
+    server.step()                     # no resurrection, no double free
+    assert h.status == RequestState.CANCELLED
