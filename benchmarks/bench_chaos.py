@@ -1,0 +1,234 @@
+"""Chaos benchmark (ISSUE 9 acceptance gates).
+
+Three measured sections on a real smoke-scale cluster, all with fault
+injection live:
+
+  * recovery token identity — a spanning request is decoding with its
+    KV striped onto a creditor rank; the creditor is killed mid-decode
+    and the request is re-admitted via token replay (re-prefill of
+    prompt + emitted output, no resampling). The final stream must be
+    byte-identical to an unfailed dense oracle, in BOTH per-instance
+    and global-pool modes (gated as ``recovery_token_identity``).
+  * goodput under one crash — a bursty deadline-carrying trace is
+    served fault-free, then twice more with a planned ``FaultPlan``
+    crash of a different rank mid-trace. The WORST crashed run's
+    on-time finishes must stay >= 0.7x the fault-free run's (gated as
+    ``chaos_goodput_ok``) — losing one of three ranks costs capacity
+    and replay work but must not collapse service.
+  * zero leaks — after every run (including the crashed ones) all
+    allocators, quarantined ranks included, must drain to zero used
+    blocks / zero reservations / zero request records (``zero_leak``;
+    the benchmark raises on any leak).
+
+Deadlines are calibrated against the measured decode step time so the
+gate tracks recovery behavior, not machine speed. The whole benchmark
+runs in float32: token identity across a changed KV placement is only
+argmax-stable when the LSE-merge regrouping rounding is far below the
+logit gaps (same convention as tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.model import decode_step, init_params
+from repro.models.prefill import prefill
+from repro.serving import (Cluster, LLMServer, Request, RequestState,
+                           SamplingParams, ServingConfig)
+from repro.serving.config import FaultPolicy
+from repro.serving.faults import FaultEvent, FaultPlan
+
+try:
+    from benchmarks.benchjson import write_bench_json
+    from benchmarks.traces import gen_bursty_trace, overload_arrivals
+except ImportError:                      # run as a script from benchmarks/
+    from benchjson import write_bench_json
+    from traces import gen_bursty_trace, overload_arrivals
+
+N_REQ = 10               # bursty trace length (CI-smoke sized)
+GEN_TOKENS = 8           # decode length per traced request
+PROMPT_LEN = 12
+CRASH_STEP = 6           # planned crash, steps after the warm-up drain
+N_INSTANCES = 3
+
+
+def _chaos_serving(**over) -> ServingConfig:
+    base = dict(n_instances=N_INSTANCES, max_batch=2,
+                heartbeat_timeout=0.0,
+                faults=FaultPolicy(max_transfer_retries=2))
+    base.update(over)
+    return ServingConfig.smoke(**base)
+
+
+def _assert_no_leaks(cl) -> None:
+    """Every allocator (quarantined ranks included) fully drained."""
+    for _ in range(2):                   # flush pending hosted releases
+        cl.step()
+    for i, e in cl.engines.items():
+        a = e.rmanager.pool.alloc
+        if a.used_count or a.reserved or e.rmanager.pool.requests:
+            raise AssertionError(
+                f"inst {i} leaked: used={a.used_count} "
+                f"reserved={a.reserved} "
+                f"records={len(e.rmanager.pool.requests)}")
+
+
+def _greedy_reference(params, cfg, prompt, n_new):
+    tokens = jnp.asarray([prompt], jnp.int32)
+    logits, state = prefill(params, cfg, tokens,
+                            max_len=len(prompt) + n_new + 2)
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        lg, state = decode_step(params, cfg, state,
+                                jnp.asarray([out[-1]], jnp.int32))
+        out.append(int(jnp.argmax(lg[0])))
+    return out
+
+
+def run_identity(params, cfg, global_pool, csv=True):
+    """Kill the creditor hosting a spanning request's KV mid-decode and
+    diff the replayed request against an unfailed dense oracle."""
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, 40).tolist()
+    n_new = 12
+    ref = _greedy_reference(params, cfg, prompt, n_new)
+
+    cl = Cluster(params, cfg,
+                 _chaos_serving(pool_blocks=32, global_pool=global_pool))
+    req = Request(prompt=prompt,
+                  sampling=SamplingParams(max_new_tokens=n_new))
+    cl.submit(req)
+    for _ in range(30):
+        cl.step()
+        if len(req.output) >= 4:
+            break
+    creditors = [i for i, e in cl.engines.items()
+                 if e.rmanager.is_hosting(req.req_id)]
+    assert creditors, "identity scenario produced no hosted span"
+    cl.kill_instance(creditors[0])
+    cl.run_until_done(max_steps=300)
+    _assert_no_leaks(cl)
+
+    identical = (req.state == RequestState.FINISHED
+                 and req.output == ref and req.replays == 1
+                 and cl.fault_stats.recoveries == 1)
+    mode = "global" if global_pool else "local"
+    if csv:
+        print(f"identity_{mode},replays={req.replays},"
+              f"replayed_tokens={cl.fault_stats.replayed_tokens},"
+              f"identical={int(identical)}")
+    return float(identical)
+
+
+def _calibrate_step_s(params, cfg) -> float:
+    """Measured per-step wall time of a warm 2-slot decode."""
+    srv = LLMServer(params, cfg, ServingConfig.smoke(
+        n_instances=1, max_batch=2, heartbeat_timeout=0.0))
+    rng = np.random.default_rng(7)
+    for _ in range(2):
+        srv.submit(rng.integers(0, cfg.vocab_size, PROMPT_LEN).tolist(),
+                   SamplingParams(max_new_tokens=24))
+    srv.step()                           # pays compile
+    t0 = time.perf_counter()
+    n = 12
+    for _ in range(n):
+        srv.step()
+    dt = (time.perf_counter() - t0) / n
+    srv.drain()
+    return dt
+
+
+def run_goodput(params, cfg, csv=True):
+    """Deadline goodput of the same bursty trace, fault-free vs with
+    one planned rank crash mid-trace (two different victims)."""
+    step_s = _calibrate_step_s(params, cfg)
+    # At-capacity arrival rate for N_INSTANCES * max_batch slots, each
+    # holding a request for ~GEN_TOKENS steps.
+    rate = (N_INSTANCES * 2) / (GEN_TOKENS * step_s)
+    trace = gen_bursty_trace(N_REQ, rate, burst_factor=3.0,
+                             prompt_len=PROMPT_LEN, seed=13)
+    # Generous deadline: every request meets it fault-free; only the
+    # crash (lost capacity + token replay) can push finishes past it.
+    deadline_s = 80 * step_s
+
+    def materialize():
+        arrivals, _ = overload_arrivals(trace, cfg.vocab_size,
+                                        deadline_p=1.0,
+                                        deadline_s=deadline_s, seed=13)
+        for a in arrivals:
+            a.sampling = SamplingParams(max_new_tokens=GEN_TOKENS)
+        return arrivals
+
+    def serve(victim):
+        srv = LLMServer(params, cfg, _chaos_serving())
+        # Warm the compile cache outside the measured trace.
+        srv.submit([1] * PROMPT_LEN,
+                   SamplingParams(max_new_tokens=2)).result()
+        if victim is not None:
+            plan = FaultPlan(events=(FaultEvent(
+                step=srv.cluster._step_count + CRASH_STEP,
+                kind="crash", target=victim),))
+            srv.cluster.install_faults(plan)
+        stats = srv.run(materialize())
+        stats["dead"] = srv.metrics["dead_instances"]
+        stats["recoveries"] = srv.metrics["fault_recoveries"]
+        _assert_no_leaks(srv.cluster)
+        return stats
+
+    base = serve(None)
+    crashed = [serve(v) for v in (1, 2)]
+    n = base["n_requests"]
+    good_base = base["deadline_goodput"] * n
+    good_worst = min(c["deadline_goodput"] * n for c in crashed)
+    ratio = good_worst / max(good_base, 1.0)
+    if csv:
+        print("goodput_metric,fault_free,crash_v1,crash_v2")
+        for k in ("deadline_goodput", "finished", "deadline_missed",
+                  "dead", "recoveries", "throughput_tok_s"):
+            print(f"{k},{base[k]:.3f},{crashed[0][k]:.3f},"
+                  f"{crashed[1][k]:.3f}")
+        print(f"step_s,{step_s * 1e3:.2f}ms,,")
+        print(f"chaos_goodput_ratio,{ratio:.2f},,")
+    return dict(ratio=ratio, step_s=step_s, base=base, crashed=crashed)
+
+
+def main():
+    t0 = time.perf_counter()
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ident_local = run_identity(params, cfg, global_pool=False)
+    ident_global = run_identity(params, cfg, global_pool=True)
+    identity = ident_local * ident_global
+    gp = run_goodput(params, cfg)
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"bench_chaos,{us:.1f},identity={identity:.0f},"
+          f"goodput_ratio={gp['ratio']:.2f}x")
+    write_bench_json(
+        "chaos",
+        rows=[["identity", ident_local, ident_global, identity, 0.0],
+              ["goodput", gp["base"]["deadline_goodput"],
+               gp["crashed"][0]["deadline_goodput"],
+               gp["crashed"][1]["deadline_goodput"], gp["ratio"]]],
+        config={"model": "olmo-1b-smoke-f32", "n_req": N_REQ,
+                "gen_tokens": GEN_TOKENS, "n_instances": N_INSTANCES,
+                "crash_step": CRASH_STEP, "step_s": gp["step_s"]},
+        header=["section", "a", "b", "c", "d"],
+        metrics={
+            # All gated metrics are higher-is-better.
+            "recovery_token_identity": identity,
+            "chaos_goodput_ratio": gp["ratio"],
+            # Hard gate on the >= 0.7x acceptance bound.
+            "chaos_goodput_ok": float(gp["ratio"] >= 0.7),
+            # _assert_no_leaks raised already if this were false.
+            "zero_leak": 1.0,
+        })
+
+
+if __name__ == "__main__":
+    main()

@@ -14,11 +14,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_context_length, bench_debtor_creditor,
-                        bench_distattn_methods, bench_e2e_traces,
-                        bench_kv_movement, bench_overload,
-                        bench_prefix_cache, bench_sharded_pool,
-                        bench_ship_query_vs_kv)
+from benchmarks import (bench_chaos, bench_context_length,
+                        bench_debtor_creditor, bench_distattn_methods,
+                        bench_e2e_traces, bench_kv_movement,
+                        bench_overload, bench_prefix_cache,
+                        bench_sharded_pool, bench_ship_query_vs_kv)
 from benchmarks.benchjson import REPO_ROOT, collect_bench_jsons, git_sha
 
 BENCHES = [
@@ -31,6 +31,7 @@ BENCHES = [
     ("issue6_prefix_cache", bench_prefix_cache.main),
     ("issue7_sharded_pool", bench_sharded_pool.main),
     ("issue8_overload", bench_overload.main),
+    ("issue9_chaos", bench_chaos.main),
 ]
 
 

@@ -102,6 +102,34 @@ donated-buffer zero-copy discipline is unchanged and CI-gated
 (``decode_pool_zero_copy``); ``bench_sharded_pool`` gates rank-scaling
 throughput.
 
+Fault tolerance (always on; chaos injection opt-in)
+---------------------------------------------------
+Pooled KV means one failed creditor rank can hold pieces of OTHER
+instances' requests, so the runtime detects, quarantines, and recovers
+deterministically. Detection: an instance that misses
+``FaultPolicy.heartbeat_timeout_steps`` consecutive heartbeats (or the
+wall-clock ``heartbeat_timeout``) is marked DEAD — its view leaves
+Algorithm-1 planning, it can never be picked as a creditor or owner
+again, and its allocator (a quarantined slice of the one tensor in
+global-pool mode) is drained wholesale. Recovery is TOKEN REPLAY:
+every request that lost KV on the dead rank re-admits through the
+normal paged admission path, re-prefilling ``prompt + output[:-1]``
+(its emitted tokens are known — no resampling), so the greedy
+continuation is byte-identical to an unfailed oracle (CI-gated as
+``recovery_token_identity`` in both pool modes). Transfers retry with
+bounded exponential backoff; host-tier fetches are verified against
+the content hash the frame was stored under (a corrupted frame raises
+instead of poisoning decode, then falls back to replay); a move stripe
+whose leg fails mid-execution rolls back exactly and re-plans against
+surviving creditors. Chaos testing: build a seedable ``FaultPlan``
+(crash / heartbeat silence / move-leg failure / host fetch error /
+frame corruption / stager timeout, each fireable at a chosen step) and
+arm it with ``cluster.install_faults(plan)``; ``server.metrics``
+surfaces ``dead_instances`` / ``fault_recoveries`` /
+``replayed_tokens`` / ``transfer_retries`` and friends. Knobs live on
+``FaultPolicy`` (see ``docs/ARCHITECTURE.md``); ``bench_chaos`` gates
+recovery identity and goodput-under-crash in CI.
+
 Internal layers (exported for tests/benchmarks, not the serving API)
 --------------------------------------------------------------------
 ``Cluster`` executes steps: N ``InstanceEngine``s (each owning a
@@ -111,8 +139,12 @@ tables) plus a ``GManager`` running the paper's Algorithm 1 via
 batch-mode pattern — new code should go through ``LLMServer``.
 """
 from repro.serving.cluster import Cluster
-from repro.serving.config import OverloadPolicy, ServingConfig
+from repro.serving.config import (FaultPolicy, OverloadPolicy,
+                                  ServingConfig)
 from repro.serving.engine import InstanceEngine
+from repro.serving.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  FaultStats, FrameCorruptionError,
+                                  TransferError)
 from repro.serving.gmanager import GManager
 from repro.serving.globalpool import GlobalKVPool
 from repro.serving.hosttier import HostKVTier
@@ -135,4 +167,6 @@ __all__ = [
     "RequestState", "SamplingParams", "RManager", "GreedyScheduler",
     "InstanceView", "SpanLeg", "StripedMove", "HostKVTier",
     "RadixPrefixCache", "GlobalKVPool",
+    "FaultPolicy", "FaultPlan", "FaultEvent", "FaultInjector",
+    "FaultStats", "TransferError", "FrameCorruptionError",
 ]

@@ -36,9 +36,19 @@ Requests whose KV spans instances decode via the owner's multi-rank
 block-table addressed); only query/merge-size traffic is charged per
 (request, creditor) span.
 
-Fault tolerance: on heartbeat timeout the instance is dropped; every
-affected request is re-enqueued for re-prefill on survivors (KV is
-recomputable from tokens); hosted blocks are reclaimed.
+Fault tolerance (``serving.faults`` is the chaos side): an instance
+that misses ``FaultPolicy.heartbeat_timeout_steps`` consecutive
+heartbeats (or the wall-clock timeout) is marked DEAD and quarantined —
+no new creditor legs, its view leaves Algorithm-1 planning, its
+allocator is drained wholesale (in global-pool mode the dead rank is a
+quarantined slice of the one tensor). Every request that lost KV on the
+dead rank — owned locally OR creditor-hosted — is recovered by TOKEN
+REPLAY: its emitted tokens are known, so the lost KV is exactly
+recomputable by re-prefilling ``prompt + output[:-1]`` through the
+normal paged admission path (no resampling; the greedy continuation is
+byte-identical to an unfailed run). Transfer failures retry with
+bounded backoff; a move stripe whose leg fails mid-execution rolls back
+exactly and re-plans against surviving creditors.
 """
 from __future__ import annotations
 
@@ -50,6 +60,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.serving.config import ServingConfig
 from repro.serving.engine import InstanceEngine
+from repro.serving.faults import FaultInjector, FaultPlan, FaultStats
 from repro.serving.gmanager import GManager
 from repro.serving.hosttier import HostKVTier
 from repro.serving.kvpool import rows_for_token_range
@@ -200,7 +211,11 @@ class Cluster:
         # creditor writes go through one double-buffered stager:
         # async_movement=True overlaps them with decode compute,
         # False is the serial baseline (bench_kv_movement A/Bs the two).
-        self.stager = AsyncStager(overlap=config.async_movement)
+        fpol = config.faults
+        self.stager = AsyncStager(overlap=config.async_movement,
+                                  max_retries=fpol.max_transfer_retries,
+                                  backoff_base_s=fpol.retry_backoff_base_s,
+                                  backoff_max_s=fpol.retry_backoff_max_s)
         # Global-pool mode: ONE [n_instances, L, NB, bs, K, hd] tensor
         # holds every instance's KV (optionally sharded over ``mesh``
         # per ``layout.pool_axes``); every engine aliases its rank's
@@ -243,7 +258,11 @@ class Cluster:
             self.host_tier = HostKVTier(
                 config.host_tier_blocks,
                 high_watermark=config.host_high_watermark,
-                low_watermark=config.host_low_watermark)
+                low_watermark=config.host_low_watermark,
+                verify=fpol.verify_host_frames,
+                max_retries=fpol.max_transfer_retries,
+                backoff_base_s=fpol.retry_backoff_base_s,
+                backoff_max_s=fpol.retry_backoff_max_s)
         if config.prefix_cache:
             self.prefix_cache = RadixPrefixCache(self,
                                                  host_tier=self.host_tier)
@@ -257,7 +276,9 @@ class Cluster:
                                  avg_new_req_len=config.avg_new_req_len,
                                  max_stripes=config.max_stripes,
                                  reclaim_horizon_s=config.reclaim_horizon_s,
-                                 arrival_alpha=config.overload.arrival_alpha)
+                                 arrival_alpha=config.overload.arrival_alpha,
+                                 heartbeat_timeout_steps=(
+                                     fpol.heartbeat_timeout_steps))
         # Overload survival (opt-in): pause/host-spill preemption with
         # its own pinned host tier, driven by the serving frontend.
         self.preemptor = None
@@ -267,6 +288,8 @@ class Cluster:
         self.requests: Dict[int, Request] = {}
         self._step_count = 0
         self._dead: set = set()
+        self.fault_stats = FaultStats()
+        self.faults: Optional[FaultInjector] = None
         self._need_full_hb: set = set(self.engines)
         # Req ids whose creditor-hosted spans still need releasing; fed
         # by the engines' finished-event drains so each finished request
@@ -491,7 +514,22 @@ class Cluster:
             if rb0 is not None:
                 owner.req_chain[mv.req_id] = [(owner.inst_id, b)
                                               for b in rb0.blocks]
-        for dst_id, n in legs:
+        failed_tail: List[Tuple[int, int]] = []
+        executed = 0
+        for li, (dst_id, n) in enumerate(legs):
+            if self.faults is not None and \
+                    self.faults.take_move_leg_fault():
+                # Injected mid-stripe leg failure: this leg and every
+                # later one are still only RESERVATIONS (their
+                # commit_move_in has not run) — cancel them exactly.
+                # Already-executed legs keep their consistent placement;
+                # the un-moved tail re-plans below against a surviving
+                # creditor outside the failed stripe.
+                self.fault_stats.move_leg_failures += 1
+                for dj, nj in legs[li:]:
+                    self.engines[dj].rmanager.cancel_move_in(nj)
+                failed_tail = legs[li:]
+                break
             dst = self.engines[dst_id]
             src_blocks = list(
                 src.rmanager.pool.requests[mv.req_id].blocks[:n])
@@ -531,6 +569,24 @@ class Cluster:
                 for ci, e in enumerate(chain):
                     if e in remap:
                         chain[ci] = remap.pop(e)
+            executed += 1
+        if failed_tail:
+            # Re-plan the un-moved tail onto a surviving creditor
+            # OUTSIDE the failed stripe (source and every failed
+            # destination excluded). One recursive attempt — a still-
+            # armed fault bounds itself by being consumed above — and
+            # no alternative simply leaves the tail where it was for
+            # the next reactive/planning round.
+            n_rest = sum(n for _, n in failed_tail)
+            alt = self._pick_creditor(
+                exclude={mv.src_inst} | {d for d, _ in failed_tail})
+            if alt is not None:
+                res = self._execute_move(MoveKVCache(
+                    mv.req_id, mv.src_inst, [MoveLeg(alt, n_rest)]))
+                if res == MoveResult.OK:
+                    self.fault_stats.move_leg_replans += 1
+                    return MoveResult.OK
+            return MoveResult.OK if executed else MoveResult.REJECTED
         # A reclaim that drained the source span drops it from the
         # owner's span map (and frees the host's metadata).
         if mv.src_inst != owner.inst_id and \
@@ -564,10 +620,11 @@ class Cluster:
                         # (paper: reject when pool exhausted).
                         eng._fail(req)
 
-    def _pick_creditor(self, exclude: int) -> Optional[int]:
+    def _pick_creditor(self, exclude) -> Optional[int]:
+        excl = {exclude} if isinstance(exclude, int) else set(exclude)
         best, best_free = None, 0
         for i, e in self.engines.items():
-            if i == exclude or i in self._dead:
+            if i in excl or i in self._dead:
                 continue
             free = e.rmanager.effective_free
             if free > best_free:
@@ -579,50 +636,101 @@ class Cluster:
         """Simulate an instance failure (stops heartbeating)."""
         self._dead.add(inst_id)
 
+    def install_faults(self, plan: FaultPlan) -> FaultInjector:
+        """Arm a deterministic chaos plan against this cluster.
+
+        Crash/silence events fire at the top of the matching ``step()``;
+        transfer faults (move leg, host fetch/corrupt, stager timeout)
+        become one-shot armed flags the subsystem hooks consume on the
+        next matching transfer. Returns the attached injector."""
+        return FaultInjector(plan).attach(self)
+
+    def _recover_via_replay(self, req: Request,
+                            owner: Optional[InstanceEngine] = None) -> bool:
+        """Re-admit one request whose KV (partially) died with a rank.
+
+        Every surviving resource the request still holds is released
+        exactly once — the live owner's slot + local blocks (when
+        ``owner`` is given), hosted spans on live creditors, cache
+        pins — then the request goes back to WAITING with
+        ``needs_replay`` set: admission re-prefills ``prompt +
+        output[:-1]`` (known tokens, NO resampling) and the next decode
+        feeds ``output[-1]``, so the greedy continuation is
+        byte-identical to an unfailed oracle. The emitted-token stream
+        is never truncated — ``RequestHandle.tokens()`` consumers see
+        no seam. A request past ``FaultPolicy.max_replays_per_request``
+        FAILs instead of replaying forever. Returns True when the
+        request was re-queued."""
+        if req.done:
+            return False
+        rid = req.req_id
+        if owner is not None:
+            if req.slot is not None and \
+                    owner.slots[req.slot] is req:
+                owner.slots[req.slot] = None
+            owner.rmanager.release_request(rid)
+            owner.remote_insts.pop(rid, None)
+            owner.req_chain.pop(rid, None)
+        req.slot = None
+        for i, e in self.engines.items():
+            if i not in self._dead and e.rmanager.is_hosting(rid):
+                e.drop_hosted(rid)
+        if self.prefix_cache is not None:
+            self.prefix_cache.release(rid)
+        if req.output and \
+                req.replays >= self.config.faults.max_replays_per_request:
+            req.state = RequestState.FAILED
+            req.finish_time = time.monotonic()
+            self.fault_stats.failed_recoveries += 1
+            return False
+        req.state = RequestState.WAITING
+        req.needs_replay = bool(req.output)
+        self.fault_stats.recoveries += 1
+        self.fault_stats.replayed_tokens += max(0, len(req.output) - 1)
+        self.submit(req)
+        return True
+
     def _handle_dead(self, dead: List[int]) -> None:
+        """Quarantine newly dead instances and recover their requests.
+
+        Every request with LOCAL blocks (owned by the dead engine) or a
+        creditor-HOSTED span on the dead rank lost KV that is exactly
+        recomputable from its known tokens — each is re-admitted via
+        ``_recover_via_replay``. The dead rank's allocator is then
+        drained wholesale (leftover records, cache replicas), so a
+        quarantined rank — or, in global-pool mode, the quarantined
+        slice of the one tensor — holds zero blocks, and the gManager
+        forgets it: its view leaves Algorithm-1 planning and
+        ``pick_instance_for_new_request`` can never choose it."""
         for d in dead:
             self._dead.add(d)
+            self.fault_stats.dead_instances += 1
             eng = self.engines[d]
-            # 1) Requests OWNED by the dead instance: re-prefill elsewhere
-            #    (KV is recomputable from prompt + generated tokens).
+            # 1) Requests OWNED by the dead instance (running or queued):
+            #    their local span is gone.
             for req in list(eng.running) + list(eng.waiting):
-                if req.done:
-                    continue
-                req.state = RequestState.WAITING
-                req.slot = None
-                req.prompt = req.prompt + req.output   # keep progress
-                req.output = []
-                # Reclaim creditor-hosted spans; they will be recomputed.
-                for i, e in self.engines.items():
-                    if i not in self._dead:
-                        e.drop_hosted(req.req_id)
-                if self.prefix_cache is not None:
-                    # The dead engine can't unpin its cached prefix;
-                    # release here so the re-submit can re-acquire.
-                    self.prefix_cache.release(req.req_id)
-                self.submit(req)
-            # 2) Requests with REMOTE spans hosted on the dead instance:
-            #    the lost span must be recomputed -> full re-prefill.
+                self._recover_via_replay(req)
+            eng.slots = [None] * eng.max_batch
+            eng.waiting = []
+            # 2) Requests owned by SURVIVORS with a span hosted on the
+            #    dead rank: the lost creditor span is replayed too.
             for i, e in self.engines.items():
                 if i in self._dead:
                     continue
                 for req in list(e.running):
                     if d in e.remote_insts.get(req.req_id, ()):
-                        req.state = RequestState.WAITING
-                        req.prompt = req.prompt + req.output
-                        req.output = []
-                        e.slots[req.slot] = None
-                        req.slot = None
-                        e.rmanager.release_request(req.req_id)
-                        if self.prefix_cache is not None:
-                            self.prefix_cache.release(req.req_id)
-                        e.remote_insts.pop(req.req_id, None)
-                        e.req_chain.pop(req.req_id, None)
-                        # Reclaim surviving creditor-hosted spans too.
-                        for j, ej in self.engines.items():
-                            if j not in self._dead:
-                                ej.drop_hosted(req.req_id)
-                        self.submit(req)
+                        self._recover_via_replay(req, owner=e)
+            # 3) Drain the dead rank's allocator: whatever records
+            #    remain (hosted spans of other dead-owned requests,
+            #    stale entries) release here, and its prefix-cache
+            #    replicas are purged — the quarantined rank ends with
+            #    zero owned blocks.
+            for rid in list(eng.rmanager.pool.requests):
+                eng.rmanager.release_request(rid)
+            if self.prefix_cache is not None:
+                self.prefix_cache.purge_instance(d)
+            eng.remote_insts.clear()
+            eng.req_chain.clear()
             self.gmanager.deregister(d)
 
     def add_instance(self, params) -> int:
@@ -652,9 +760,19 @@ class Cluster:
         now = time.monotonic() if now is None else now
         self._step_count += 1
 
-        # Heartbeats (dead instances stay silent).
+        # Armed chaos events fire first: a crash injected at this step
+        # already misses this step's heartbeat, exactly like a real
+        # failure in the gap between steps.
+        if self.faults is not None:
+            self.faults.on_step(self._step_count, self)
+
+        # Heartbeats (dead and fault-silenced instances stay silent).
+        beat: set = set()
         for i, eng in self.engines.items():
             if i in self._dead:
+                continue
+            if self.faults is not None and \
+                    self.faults.silenced(i, self._step_count):
                 continue
             full = i in self._need_full_hb or self.gmanager.bootstrapping
             ok = self.gmanager.on_heartbeat(eng.rmanager.heartbeat(full),
@@ -663,9 +781,15 @@ class Cluster:
                 self.gmanager.on_heartbeat(
                     eng.rmanager.heartbeat(full=True), now=now)
             self._need_full_hb.discard(i)
+            beat.add(i)
         self.gmanager.bootstrapping = False
 
+        # Liveness: wall-clock timeout (back-compat) OR the
+        # deterministic step-count detector (FaultPolicy).
         dead = self.gmanager.check_liveness(now=now)
+        for d in self.gmanager.check_liveness_steps(beat):
+            if d not in dead:
+                dead.append(d)
         if dead:
             self._handle_dead(dead)
 

@@ -61,6 +61,44 @@ class OverloadPolicy:
 
 
 @dataclass(frozen=True)
+class FaultPolicy:
+    """Fault-tolerance knobs: detection, retry budgets, replay caps.
+
+    Always on — these bound how the cluster reacts when something
+    breaks, they never cause work by themselves. Detection: an instance
+    is marked DEAD and quarantined after ``heartbeat_timeout_steps``
+    consecutive missed heartbeats (step-count based, deterministic —
+    the wall-clock ``ServingConfig.heartbeat_timeout`` still applies
+    independently). Recovery: every request that lost KV on a dead rank
+    is re-admitted via token-replay re-prefill of ``prompt +
+    output[:-1]`` (known tokens, no resampling), at most
+    ``max_replays_per_request`` times before it FAILs. Transfers
+    (stager drains, host-tier fetches) retry up to
+    ``max_transfer_retries`` with bounded exponential backoff, and
+    host frames are verified against the content hash they were stored
+    under when ``verify_host_frames`` is set. Frozen like
+    ``ServingConfig``; derive variants with ``dataclasses.replace``.
+    """
+
+    heartbeat_timeout_steps: int = 3   # missed beats before DEAD (0 = off)
+    max_transfer_retries: int = 2      # per-transfer retry budget
+    retry_backoff_base_s: float = 0.0  # backoff = min(cap, base * 2**i);
+    retry_backoff_max_s: float = 0.05  # base 0 = immediate retries (tests)
+    max_replays_per_request: int = 3   # replay recoveries before FAILED
+    verify_host_frames: bool = True    # hash-check H2D host-tier fetches
+
+    def __post_init__(self):
+        if self.heartbeat_timeout_steps < 0:
+            raise ValueError("heartbeat_timeout_steps must be >= 0")
+        if self.max_transfer_retries < 0:
+            raise ValueError("max_transfer_retries must be >= 0")
+        if self.retry_backoff_base_s < 0 or self.retry_backoff_max_s < 0:
+            raise ValueError("retry backoff times must be >= 0")
+        if self.max_replays_per_request < 0:
+            raise ValueError("max_replays_per_request must be >= 0")
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     """All serving knobs. Frozen: derive variants via ``replace()``."""
 
@@ -100,6 +138,8 @@ class ServingConfig:
     admission_policy: str = "queue"  # "queue" | "reject" when bounded out
     # --- overload survival (preemption) -------------------------------- #
     overload: OverloadPolicy = OverloadPolicy()  # pause/spill/resume knobs
+    # --- fault tolerance ----------------------------------------------- #
+    faults: FaultPolicy = FaultPolicy()  # detection/retry/replay budgets
 
     def __post_init__(self):
         if self.admission_policy not in ("queue", "reject"):

@@ -300,7 +300,8 @@ class InstanceEngine:
         if slot is None:
             return False
         req = self.waiting[0]
-        T = len(req.prompt)
+        tokens = self._admit_tokens(req)
+        T = len(tokens)
         bs = self.block_size
         # Admit with one block of quota headroom so the first decode
         # appends never breach the local budget before a reactive move
@@ -326,7 +327,7 @@ class InstanceEngine:
         self.waiting.pop(0)
 
         if self._can_pool:
-            logits = self._admit_streaming(req, n_over, n_local)
+            logits = self._admit_streaming(req, tokens, n_over, n_local)
             if logits is None:                   # cluster-wide OOM
                 req.state = RequestState.FAILED
                 req.finish_time = time.monotonic()
@@ -348,20 +349,43 @@ class InstanceEngine:
                 self.waiting.insert(0, req)
                 return False
         else:
-            logits = self._admit_dense(req, slot, T, n_local)
+            logits = self._admit_dense(req, slot, tokens, n_local)
         self.rmanager.set_owner(req.req_id, True)
         req.slot = slot
         req.state = RequestState.RUNNING
         self.slots[slot] = req
+        if req.needs_replay and req.output:
+            # Replay re-admission (crash recovery): the KV now covers
+            # prompt + output[:-1] — exactly the state an unfailed
+            # decode would hold. The final prefill logits would merely
+            # re-produce output[-1] (already emitted to the stream), so
+            # NOTHING is emitted here; the next decode step feeds
+            # output[-1], the normal decode input convention.
+            req.needs_replay = False
+            req.replays += 1
+            req.replayed_tokens += len(req.output) - 1
+            return True
+        req.needs_replay = False
         # First generated token comes from the final prefill logits.
         self._emit(req, int(self._sample_tokens(logits, [req])[0]))
         return True
 
-    def _admit_dense(self, req: Request, slot: int, T: int,
+    def _admit_tokens(self, req: Request) -> List[int]:
+        """The token sequence admission must prefill: the prompt, or —
+        for a crash-recovery replay — prompt + output[:-1] (every
+        generated token except the last, whose KV row was never
+        written: the next decode step feeds it, exactly as it would
+        have on an unfailed instance)."""
+        if req.needs_replay and req.output:
+            return list(req.prompt) + list(req.output[:-1])
+        return list(req.prompt)
+
+    def _admit_dense(self, req: Request, slot: int, tokens: List[int],
                      n_local: int) -> jax.Array:
         """Hybrid/ssm admission: dense prefill into a DecodeState slot."""
-        tokens = jnp.asarray([req.prompt], jnp.int32)
-        logits, full_state = prefill(self.params, self.cfg, tokens,
+        T = len(tokens)
+        tok_arr = jnp.asarray([tokens], jnp.int32)
+        logits, full_state = prefill(self.params, self.cfg, tok_arr,
                                      max_len=T)
         if full_state.kv_k is not None:
             self.stats.admit_stage_bytes = max(
@@ -405,7 +429,7 @@ class InstanceEngine:
         self.pool_k = scatter_pool_rows(self.pool_k, blk, off, k)
         self.pool_v = scatter_pool_rows(self.pool_v, blk, off, v)
 
-    def _admit_cached_prefix(self, req: Request,
+    def _admit_cached_prefix(self, req: Request, tokens: List[int],
                              n_local: int) -> Tuple[int, int]:
         """Walk the prefix cache and attach the longest cached prefix to
         the request's local chain. Returns ``(n_cached, write_from)``:
@@ -425,8 +449,8 @@ class InstanceEngine:
         would have produced."""
         cache, pool, bs = self.prefix_cache, self.rmanager.pool, \
             self.block_size
-        rid, T = req.req_id, len(req.prompt)
-        shared = cache.acquire(self.inst_id, rid, req.prompt,
+        rid, T = req.req_id, len(tokens)
+        shared = cache.acquire(self.inst_id, rid, tokens,
                                max_blocks=n_local // bs)
         if not shared:
             return 0, 0
@@ -454,8 +478,8 @@ class InstanceEngine:
         self.stats.cache_hit_tokens += n_cached
         return n_cached, (T if cow_src is not None else 0)
 
-    def _admit_streaming(self, req: Request, n_over: int,
-                         n_local: int):
+    def _admit_streaming(self, req: Request, tokens: List[int],
+                         n_over: int, n_local: int):
         """Dense/moe admission: reserve every block, then stream chunks.
 
         All placement decisions happen BEFORE any compute: the longest
@@ -474,7 +498,8 @@ class InstanceEngine:
         cache = self.prefix_cache
         n_cached, write_from = 0, 0
         if cache is not None:
-            n_cached, write_from = self._admit_cached_prefix(req, n_local)
+            n_cached, write_from = self._admit_cached_prefix(
+                req, tokens, n_local)
         sink = None
         if n_over:
             sink = self.prefix_sink(req, n_over, start=n_cached)
@@ -493,7 +518,7 @@ class InstanceEngine:
                 if cache is not None:
                     cache.release(rid)
                 return None
-        logits = self._stream_prefill(req, n_over, n_local, sink,
+        logits = self._stream_prefill(req, tokens, n_over, n_local, sink,
                                       n_cached=n_cached,
                                       write_from=write_from)
         if logits is _CANCELLED or logits is _PAUSED:
@@ -528,8 +553,9 @@ class InstanceEngine:
             self.req_chain[rid] = chain
         return logits
 
-    def _stream_prefill(self, req: Request, n_over: int, n_local: int,
-                        sink, n_cached: int = 0,
+    def _stream_prefill(self, req: Request, tokens: List[int],
+                        n_over: int, n_local: int, sink,
+                        n_cached: int = 0,
                         write_from: int = 0) -> jax.Array:
         """Drive ``prefill_chunk_paged`` over the prompt, O(chunk) peak.
 
@@ -549,10 +575,11 @@ class InstanceEngine:
         union of the covered tables is exact.
         """
         if self.gpool is not None:
-            return self._stream_prefill_global(req, n_over, n_local, sink,
+            return self._stream_prefill_global(req, tokens, n_over,
+                                               n_local, sink,
                                                n_cached, write_from)
         rid = req.req_id
-        T = len(req.prompt)
+        T = len(tokens)
         bs, C = self.block_size, self.prefill_chunk
         pool = self.rmanager.pool
         NB = pool.alloc.num_blocks
@@ -571,7 +598,7 @@ class InstanceEngine:
             t1 = min(t0 + C, T)
             n_valid = t1 - t0
             toks = np.zeros(C, np.int32)
-            toks[:n_valid] = req.prompt[t0:t1]
+            toks[:n_valid] = tokens[t0:t1]
             # Owner-pool write target per chunk row; creditor-bound and
             # padded rows carry block id NB (out of range => dropped).
             wblk = np.full(C, NB, np.int32)
@@ -616,8 +643,9 @@ class InstanceEngine:
             sink.flush()
         return logits
 
-    def _stream_prefill_global(self, req: Request, n_over: int,
-                               n_local: int, sink, n_cached: int = 0,
+    def _stream_prefill_global(self, req: Request, tokens: List[int],
+                               n_over: int, n_local: int, sink,
+                               n_cached: int = 0,
                                write_from: int = 0):
         """``_stream_prefill`` over the GLOBAL pool tensor.
 
@@ -629,7 +657,7 @@ class InstanceEngine:
         the reservation/coverage ledger (its flush is a no-op drain).
         """
         rid = req.req_id
-        T = len(req.prompt)
+        T = len(tokens)
         bs, C = self.block_size, self.prefill_chunk
         gpool = self.gpool
         pool = self.rmanager.pool
@@ -644,7 +672,7 @@ class InstanceEngine:
             t1 = min(t0 + C, T)
             n_valid = t1 - t0
             toks = np.zeros(C, np.int32)
-            toks[:n_valid] = req.prompt[t0:t1]
+            toks[:n_valid] = tokens[t0:t1]
             # Per-row (rank, block, offset) target; padded rows and
             # suppressed rewrites keep the out-of-range block sentinel.
             wrank = np.full(C, self.inst_id, np.int32)

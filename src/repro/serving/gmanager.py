@@ -85,6 +85,7 @@ class _InstanceStatus:
     mem_blocks_used: int = 0
     cache_blocks: int = 0          # unpinned (reclaimable) cache replicas
     alive: bool = True
+    missed_beats: int = 0          # consecutive silent cluster steps
     # req_id -> entry (this instance's slice of the request)
     entries: Dict[int, RequestPlacementEntry] = field(default_factory=dict)
 
@@ -101,7 +102,8 @@ class GManager:
                  beta_thres: int = 64, mem_util_thres: float = 0.8,
                  avg_new_req_len: int = 512, max_stripes: int = 8,
                  reclaim_horizon_s: float = 1.0,
-                 arrival_alpha: float = 0.3):
+                 arrival_alpha: float = 0.3,
+                 heartbeat_timeout_steps: int = 0):
         self.scheduler = GreedyScheduler(perf, block_size,
                                          beta_thres=beta_thres,
                                          mem_util_thres=mem_util_thres,
@@ -110,6 +112,7 @@ class GManager:
                                          reclaim_horizon_s=reclaim_horizon_s)
         self.block_size = block_size
         self.timeout = heartbeat_timeout
+        self.timeout_steps = heartbeat_timeout_steps  # 0 = step check off
         self.instances: Dict[int, _InstanceStatus] = {}
         self.bootstrapping = True     # new gManager needs full heartbeats
         self.arrivals = ArrivalEstimator(alpha=arrival_alpha,
@@ -150,6 +153,7 @@ class GManager:
         st.mem_blocks_used = hb.mem_blocks_used
         st.cache_blocks = hb.cache_blocks
         st.alive = True
+        st.missed_beats = 0
         return True
 
     # --- failure detection / elasticity -------------------------------- #
@@ -159,6 +163,28 @@ class GManager:
         dead = []
         for st in self.instances.values():
             if st.alive and now - st.last_beat > self.timeout:
+                st.alive = False
+                dead.append(st.inst_id)
+        return dead
+
+    def check_liveness_steps(self, beat_insts) -> List[int]:
+        """Step-count liveness: every alive instance NOT in
+        ``beat_insts`` (the set that heartbeat this cluster step) gets
+        one missed beat; ``heartbeat_timeout_steps`` consecutive misses
+        mark it dead. Deterministic companion to the wall-clock
+        ``check_liveness`` — a single beat resets the counter, so a
+        silence gap shorter than the timeout is tolerated. Returns the
+        newly dead instance ids (empty when the step check is off)."""
+        if self.timeout_steps <= 0:
+            return []
+        dead = []
+        for st in self.instances.values():
+            if not st.alive:
+                continue
+            if st.inst_id in beat_insts:
+                continue
+            st.missed_beats += 1
+            if st.missed_beats >= self.timeout_steps:
                 st.alive = False
                 dead.append(st.inst_id)
         return dead

@@ -32,10 +32,14 @@ evicted node's now-unreachable subtree there.
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.serving.faults import (FrameCorruptionError, TransferError,
+                                  backoff_delay_s)
 
 
 @dataclass
@@ -50,6 +54,9 @@ class HostTierStats:
     stall_wait_s: float = 0.0    # host time spent blocked in stalls
     evictions: int = 0
     rejected: int = 0            # put() refused (tier full of pinned keys)
+    fetch_retries: int = 0       # transient fetch errors absorbed by retry
+    fetch_failures: int = 0      # fetches that exhausted the retry budget
+    corruptions: int = 0         # frames that failed hash verification
 
 
 class HostKVTier:
@@ -58,12 +65,23 @@ class HostKVTier:
     Keys are content hashes (the radix cache's node hashes) or any
     hashable id; one key maps to ONE block's (k, v) rows of shape
     ``[L, block_size, K, hd]``.
+
+    With ``verify=True`` every frame is checksummed (CRC32 of its raw
+    bytes) when the D2H spill finalizes, and every ``get`` re-checks the
+    stored bytes against that hash before handing them out — a
+    corrupted or swapped frame raises ``FrameCorruptionError`` (and is
+    dropped) instead of silently poisoning decode. Transient fetch
+    errors (``TransferError``, e.g. an injected chaos fault) are
+    retried up to ``max_retries`` times with bounded exponential
+    backoff before propagating.
     """
 
     def __init__(self, capacity_blocks: int, *,
                  high_watermark: float = 0.9, low_watermark: float = 0.7,
                  on_evict: Optional[Callable[[Any], None]] = None,
-                 evictable_fn: Optional[Callable[[Any], bool]] = None):
+                 evictable_fn: Optional[Callable[[Any], bool]] = None,
+                 verify: bool = False, max_retries: int = 0,
+                 backoff_base_s: float = 0.0, backoff_max_s: float = 0.05):
         assert capacity_blocks >= 0
         assert 0.0 < low_watermark <= high_watermark <= 1.0
         self.capacity = capacity_blocks
@@ -71,14 +89,23 @@ class HostKVTier:
         self.low = low_watermark
         self.on_evict = on_evict
         self.evictable_fn = evictable_fn
+        self.verify = verify
+        self.max_retries = max(0, max_retries)
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
         # key -> (k_np, v_np) finalized frames.
         self._frames: Dict[Any, Tuple[np.ndarray, np.ndarray]] = {}
         # key -> (k_dev, v_dev) with copy_to_host_async dispatched.
         self._pending: Dict[Any, Tuple[Any, Any]] = {}
+        self._sums: Dict[Any, int] = {}       # key -> stored-frame CRC32
         self._tick: Dict[Any, int] = {}       # key -> LRU clock value
         self._clock = 0
         self.pinned: set = set()
         self.stats = HostTierStats()
+        # Chaos hook: called with the key on each fetch; may return
+        # "error" (inject a transient TransferError) or "corrupt"
+        # (bit-flip the stored frame). See serving.faults.
+        self.fault_hook: Optional[Callable[[Any], Optional[str]]] = None
 
     # ----------------------------------------------------------------- #
     @property
@@ -152,10 +179,23 @@ class HostKVTier:
         for key, (k, v) in self._pending.items():
             if not block and not (self._is_ready(k) and self._is_ready(v)):
                 continue
-            self._frames[key] = (np.asarray(k), np.asarray(v))
+            self._finalize(key, k, v)
             done.append(key)
         for key in done:
             del self._pending[key]
+
+    def _finalize(self, key: Any, k: Any, v: Any) -> None:
+        # The landed host bytes are the frame of record: the content
+        # hash every later fetch is verified against is taken HERE.
+        frame = (np.asarray(k), np.asarray(v))
+        self._frames[key] = frame
+        if self.verify:
+            self._sums[key] = self._checksum(frame)
+
+    @staticmethod
+    def _checksum(frame: Tuple[np.ndarray, np.ndarray]) -> int:
+        return zlib.crc32(frame[1].tobytes(),
+                          zlib.crc32(frame[0].tobytes()))
 
     @staticmethod
     def _is_ready(a: Any) -> bool:
@@ -167,28 +207,72 @@ class HostKVTier:
     # ----------------------------------------------------------------- #
     def get(self, key: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Host rows for ``key`` — finalizing (and counting as a stall)
-        a spill that is still in flight."""
+        a spill that is still in flight.
+
+        Raises ``TransferError`` after ``max_retries`` failed fetch
+        attempts and ``FrameCorruptionError`` (dropping the frame) when
+        verification does not match the stored content hash; returns
+        None only for a genuinely absent key (raced eviction)."""
+        attempt = 0
+        while True:
+            try:
+                return self._get_once(key)
+            except TransferError:
+                if attempt >= self.max_retries:
+                    self.stats.fetch_failures += 1
+                    raise
+                self.stats.fetch_retries += 1
+                delay = backoff_delay_s(attempt, self.backoff_base_s,
+                                        self.backoff_max_s)
+                if delay > 0:
+                    time.sleep(delay)
+                attempt += 1
+
+    def _get_once(self, key: Any) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         if key in self._pending:
             k, v = self._pending.pop(key)
             stalled = not (self._is_ready(k) and self._is_ready(v))
             t0 = time.perf_counter()
-            self._frames[key] = (np.asarray(k), np.asarray(v))
+            self._finalize(key, k, v)
             if stalled:
                 self.stats.fetch_stalls += 1
                 self.stats.stall_wait_s += time.perf_counter() - t0
+        if key in self._frames and self.fault_hook is not None:
+            mode = self.fault_hook(key)
+            if mode == "error":
+                raise TransferError(f"injected host fetch error "
+                                    f"(key={key!r})")
+            if mode == "corrupt":
+                self._corrupt(key)
         frame = self._frames.get(key)
         if frame is None:
             return None
+        if self.verify and key in self._sums and \
+                self._checksum(frame) != self._sums[key]:
+            self.stats.corruptions += 1
+            self.drop(key)
+            raise FrameCorruptionError(
+                f"host frame {key!r} failed content-hash verification")
         self._touch(key)
         self.stats.fetches += 1
         self.stats.fetched_bytes += int(
             frame[0].nbytes + frame[1].nbytes)
         return frame
 
+    def _corrupt(self, key: Any) -> None:
+        # Chaos injection: flip the first byte of the stored K rows —
+        # exactly what a wrong/bit-rotted frame looks like to a reader.
+        k, v = self._frames[key]
+        kb = bytearray(k.tobytes())
+        kb[0] ^= 0xFF
+        self._frames[key] = (
+            np.frombuffer(bytes(kb), dtype=k.dtype).reshape(k.shape), v)
+
     def drop(self, key: Any) -> None:
         """Forget ``key`` entirely (pending or resident; idempotent)."""
         self._pending.pop(key, None)
         self._frames.pop(key, None)
+        self._sums.pop(key, None)
         self._tick.pop(key, None)
         self.pinned.discard(key)
 

@@ -39,6 +39,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.serving.config import OverloadPolicy
+from repro.serving.faults import FrameCorruptionError, TransferError
 from repro.serving.hosttier import HostKVTier
 from repro.serving.request import Request, RequestState
 
@@ -93,8 +94,13 @@ class Preemptor:
         # Watermarks at 1.0: eviction never runs below hard capacity —
         # every resident frame is pinned anyway while its request is
         # paused, so LRU pressure has nothing it may legally evict.
+        fpol = cluster.config.faults
         self.tier = HostKVTier(policy.preempt_host_blocks,
-                               high_watermark=1.0, low_watermark=1.0)
+                               high_watermark=1.0, low_watermark=1.0,
+                               verify=fpol.verify_host_frames,
+                               max_retries=fpol.max_transfer_retries,
+                               backoff_base_s=fpol.retry_backoff_base_s,
+                               backoff_max_s=fpol.retry_backoff_max_s)
         self.paused: Dict[int, _PausedRecord] = {}
         self.stats = PreemptStats()
         # Best urgency among the frontend's still-queued requests (set
@@ -254,10 +260,22 @@ class Preemptor:
         """Try to re-admit one parked request on some live engine."""
         req, rid = rec.req, rec.req.req_id
         frames = []
-        for i in range(rec.n_frames):
-            f = self.tier.get((rid, i))
-            assert f is not None, "pinned preempt frame evicted"
-            frames.append(f)
+        try:
+            for i in range(rec.n_frames):
+                f = self.tier.get((rid, i))
+                assert f is not None, "pinned preempt frame evicted"
+                frames.append(f)
+        except (TransferError, FrameCorruptionError):
+            # A parked frame that cannot be fetched (or fails hash
+            # verification) makes a byte-identical restore impossible —
+            # fall back to token-replay recovery: drop the record and
+            # re-admit via re-prefill of the known tokens.
+            for i in range(rec.n_frames):
+                self.tier.drop((rid, i))
+            self.paused.pop(rid, None)
+            self.stats.failed_resumes += 1
+            self.cluster._recover_via_replay(req)
+            return False
         # Engines with spare capacity first; never steal a slot an
         # already-dispatched (engine-waiting) request is about to take.
         cands = [e for e in self._live_engines()

@@ -44,6 +44,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.serving.faults import FrameCorruptionError, TransferError
 from repro.serving.hosttier import HostKVTier
 
 # Allocator owner id of frames held by the cache (never a real req_id).
@@ -190,7 +191,15 @@ class RadixPrefixCache:
             self.cluster.stager.stage((eng.pool_k, eng.pool_v),
                                       tag="prefetch")
         elif node.on_host and self.tier is not None:
-            frame = self.tier.get(node.hash)      # stall-aware
+            try:
+                frame = self.tier.get(node.hash)  # stall-aware
+            except (TransferError, FrameCorruptionError):
+                # Unfetchable or hash-mismatched host frame: treat it
+                # as LOST rather than poisoning decode with wrong KV.
+                # The shortened cached prefix means admission simply
+                # re-prefills those tokens — token-replay fallback.
+                self.tier.drop(node.hash)
+                frame = None
             if frame is None:                     # raced a host eviction
                 node.on_host = False
                 alloc.free([blk])
@@ -345,6 +354,27 @@ class RadixPrefixCache:
             nd.on_host = False
             self._nodes.pop(nd.hash, None)
         return freed
+
+    def purge_instance(self, inst_id: int) -> int:
+        """Quarantine cleanup for a dead rank: pop every cache replica
+        on ``inst_id`` and return its allocator reference (the rank's
+        pool is being drained wholesale), dropping any node left with
+        no storage at all. Host frames and live-rank replicas survive —
+        they stay warm-hittable. Returns replicas purged."""
+        purged = 0
+        for node in list(self._nodes.values()):
+            if node.hash not in self._nodes:
+                continue                 # removed by a cascading delete
+            blk = node.replicas.pop(inst_id, None)
+            if blk is None:
+                continue
+            eng = self.cluster.engines.get(inst_id)
+            if eng is not None:
+                eng.rmanager.pool.alloc.free([blk])
+            purged += 1
+            if not node.replicas and not node.on_host:
+                self._drop_subtree(node)
+        return purged
 
     # --- host-tier callbacks ------------------------------------------- #
     def _host_evictable(self, key: int) -> bool:

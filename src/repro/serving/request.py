@@ -102,6 +102,10 @@ class Request:
     pause_requested: bool = False     # cooperative mid-prefill pause flag
     preemptions: int = 0              # times this request has been paused
     paused_at: Optional[float] = None  # monotonic time of the last pause
+    # --- fault recovery (token replay) ---------------------------------- #
+    needs_replay: bool = False        # re-admit via prompt+output re-prefill
+    replays: int = 0                  # completed token-replay recoveries
+    replayed_tokens: int = 0          # generated tokens re-prefilled so far
     slot: Optional[int] = None        # engine batch slot while RUNNING
     # Cluster placement: ordered spans (instance_id, n_tokens) covering
     # [0, len); the LAST span is always on the owner (debtor) instance.

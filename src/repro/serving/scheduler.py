@@ -526,6 +526,16 @@ class GreedyScheduler:
         # so the gManager can re-plan from the same state.
         urgency = urgency or {}
         views = [v.copy() for v in views if v.alive]
+        # Quarantine hardening: a dead rank's view is excluded above,
+        # and any STALE span entry naming a non-alive creditor is
+        # stripped from the survivors' placement maps — it must not be
+        # scored as a merge cost, a reclaim source, or a stripe target.
+        alive_ids = {v.inst_id for v in views}
+        for v in views:
+            v.req_spans = {rid: kept
+                           for rid, spans in v.req_spans.items()
+                           if (kept := {i: b for i, b in spans.items()
+                                        if i in alive_ids})}
 
         def inst_urgency(v: InstanceView) -> float:
             """Most urgent owned request on ``v`` (0 if none)."""

@@ -321,9 +321,11 @@ class LLMServer:
         """Cluster-wide occupancy counters: device-pool blocks (total /
         used / free), prefix-cache footprint (device replicas, pinned by
         live requests), host-tier occupancy, and cumulative spill /
-        prefetch / hit traffic. Cache and host-tier entries are present
-        (as zeros) even when the features are off, so dashboards keyed
-        on the names never miss."""
+        prefetch / hit traffic — plus fault-tolerance counters (dead
+        ranks, token-replay recoveries, replayed tokens, transfer
+        retries/failures, frame corruptions). Cache, host-tier, and
+        fault entries are present (as zeros) even when the features are
+        off/quiet, so dashboards keyed on the names never miss."""
         cl = self.cluster
         total = used = free = 0
         spill = prefetch = hit_toks = 0
@@ -375,6 +377,30 @@ class LLMServer:
             out["paused_now"] = float(len(cl.preemptor.paused))
             out["preempt_tier_blocks_used"] = float(
                 cl.preemptor.tier.used_blocks)
+        # Fault-tolerance counters: detection, token-replay recovery,
+        # and transfer retry/failure totals (stager + every host tier).
+        fs = cl.fault_stats
+        retries = float(sum(cl.stager.retries.values()))
+        failures = float(sum(cl.stager.failures.values()))
+        corruptions = 0.0
+        tiers = [cl.host_tier]
+        if cl.preemptor is not None:
+            tiers.append(cl.preemptor.tier)
+        for tier in tiers:
+            if tier is not None:
+                retries += float(tier.stats.fetch_retries)
+                failures += float(tier.stats.fetch_failures)
+                corruptions += float(tier.stats.corruptions)
+        out.update({
+            "dead_instances": float(len(cl._dead)),
+            "fault_recoveries": float(fs.recoveries),
+            "fault_failed_recoveries": float(fs.failed_recoveries),
+            "replayed_tokens": float(fs.replayed_tokens),
+            "move_leg_failures": float(fs.move_leg_failures),
+            "transfer_retries": retries,
+            "transfer_failures": failures,
+            "host_frame_corruptions": corruptions,
+        })
         return out
 
     # --- open-loop event pump ------------------------------------------ #

@@ -30,9 +30,11 @@ from __future__ import annotations
 
 import time
 from collections import defaultdict, deque
-from typing import Any, Deque, Dict, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Optional, Tuple
 
 import jax
+
+from repro.serving.faults import TransferError, backoff_delay_s
 
 
 class AsyncStager:
@@ -43,17 +45,36 @@ class AsyncStager:
     WAIT — the copy was still in flight when the host needed it done.
     ``bench_prefix_cache`` gates prefetch stalls per decode step with
     these.
+
+    Failure handling: draining a chain that raises ``TransferError``
+    (e.g. an injected ``FaultPlan`` timeout) is retried up to
+    ``max_retries`` times with bounded exponential backoff (counted in
+    ``retries`` per tag). On exhaustion — or any non-transient error —
+    the failure is counted in ``failures`` per tag, the REMAINING
+    in-flight ring is drained to a clean state (secondary errors are
+    counted, not raised), and the original error propagates instead of
+    being swallowed with a half-populated ring.
     """
 
-    def __init__(self, overlap: bool = True, depth: int = 2):
+    def __init__(self, overlap: bool = True, depth: int = 2, *,
+                 max_retries: int = 0, backoff_base_s: float = 0.0,
+                 backoff_max_s: float = 0.05):
         self.overlap = overlap
         self.depth = max(1, depth)
+        self.max_retries = max(0, max_retries)
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
         self._inflight: Deque[Tuple[Any, Optional[str]]] = deque()
         self.staged = 0          # copy chains handed to the stager
         self.synced = 0          # explicit block_until_ready calls
         self.sync_wait_s = 0.0   # host time spent blocked on copies
         self.stalls: Dict[str, int] = defaultdict(int)
         self.stall_wait_s: Dict[str, float] = defaultdict(float)
+        self.retries: Dict[str, int] = defaultdict(int)
+        self.failures: Dict[str, int] = defaultdict(int)
+        # Chaos hook: called with the chain's tag before each wait; a
+        # True return injects one TransferError (see serving.faults).
+        self.fault_hook: Optional[Callable[[Optional[str]], bool]] = None
 
     def stage(self, arrays: Any, tag: Optional[str] = None) -> None:
         """Register one dispatched copy chain (any pytree of arrays).
@@ -76,6 +97,47 @@ class AsyncStager:
             self._block(*self._inflight.popleft())
 
     def _block(self, arrays: Any, tag: Optional[str] = None) -> None:
+        # Retry wrapper around the actual wait. The chain was already
+        # popped from the ring by the caller, so a chain that ultimately
+        # fails is never left in flight.
+        name = tag or "untagged"
+        attempt = 0
+        while True:
+            try:
+                self._wait_ready(arrays, tag)
+                return
+            except TransferError:
+                if attempt < self.max_retries:
+                    self.retries[name] += 1
+                    delay = backoff_delay_s(attempt, self.backoff_base_s,
+                                            self.backoff_max_s)
+                    if delay > 0:
+                        time.sleep(delay)
+                    attempt += 1
+                    continue
+                self.failures[name] += 1
+                self._drain_after_failure()
+                raise
+            except Exception:
+                self.failures[name] += 1
+                self._drain_after_failure()
+                raise
+
+    def _drain_after_failure(self) -> None:
+        # Leave the ring EMPTY and consistent after a failed chain:
+        # secondary errors while flushing the survivors are counted but
+        # not raised (the primary error is the one that propagates).
+        pending, self._inflight = list(self._inflight), deque()
+        for arrays, tag in pending:
+            try:
+                self._wait_ready(arrays, tag)
+            except Exception:
+                self.failures[tag or "untagged"] += 1
+
+    def _wait_ready(self, arrays: Any, tag: Optional[str] = None) -> None:
+        if self.fault_hook is not None and self.fault_hook(tag):
+            raise TransferError(
+                f"injected stager transfer timeout (tag={tag!r})")
         # A staged handle may since have been DONATED into a successor
         # update (the zero-copy chain); its buffer lives on inside the
         # successor, which is itself staged — so deleted handles are

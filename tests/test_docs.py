@@ -71,6 +71,16 @@ def test_overload_policy_knobs_match_architecture_doc():
         f"docs/ARCHITECTURE.md rows for removed knobs: {sorted(doc - code)}"
 
 
+def test_fault_policy_knobs_match_architecture_doc():
+    mod = _load_config_module()
+    code = {f.name for f in dataclasses.fields(mod.FaultPolicy)}
+    doc = _table_fields("FaultPolicy")
+    assert code - doc == set(), \
+        f"knobs missing from docs/ARCHITECTURE.md: {sorted(code - doc)}"
+    assert doc - code == set(), \
+        f"docs/ARCHITECTURE.md rows for removed knobs: {sorted(doc - code)}"
+
+
 def test_request_states_all_documented():
     """Every RequestState value appears in the lifecycle section."""
     tree = ast.parse((SERVING / "request.py").read_text())
